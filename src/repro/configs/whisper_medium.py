@@ -1,0 +1,23 @@
+"""whisper-medium [audio] — encoder-decoder (arXiv:2212.04356).
+Conv frontend STUBBED: input_specs() supplies precomputed frame embeddings
+(B, 1500, d_model).  Assigned seq lens apply to the decoder; decode_32k =
+decoder self-attn KV 32k + cross-attn KV 1500.  long_500k skipped."""
+from repro.configs.base import ArchConfig, EncoderSpec, Segment
+
+ARCH = ArchConfig(
+    name="whisper-medium",
+    family="audio",
+    n_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=4096,
+    vocab=51865,
+    act="gelu",
+    norm="layernorm",
+    attn_bias=True,
+    tie_embeddings=True,
+    pattern=(Segment(("wdec",), 24),),
+    encoder=EncoderSpec(n_layers=24, seq_len=1500, d_ff=4096),
+    frontend="audio",
+)

@@ -1,0 +1,84 @@
+"""Profiling — ASA Algorithm 1 lines 6-7 and the re-profile trigger (21-23).
+
+Two layers:
+  * ComponentProfiler — measures wall-time of jitted per-component apply fns
+    (initial profiling phase).  On CPU this measures the smoke-scale configs;
+    on TPU the same harness times the real blocks.  Measurements are turned
+    into *calibration factors* (measured / predicted) for the cost model.
+  * StepMonitor — EMA of live step times; signals drift (paper: "if
+    communication patterns changed significantly -> re-profile").
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+
+
+@dataclasses.dataclass
+class ProfileResult:
+    name: str
+    mean_s: float
+    n: int
+
+
+def time_fn(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters
+
+
+class ComponentProfiler:
+    """Times per-component jitted fns and derives calibration factors."""
+
+    def __init__(self):
+        self.measurements: dict[str, ProfileResult] = {}
+
+    def profile(self, name: str, fn: Callable, *args,
+                iters: int = 5) -> ProfileResult:
+        mean = time_fn(jax.jit(fn), *args, iters=iters)
+        res = ProfileResult(name, mean, iters)
+        self.measurements[name] = res
+        return res
+
+    def calibration(self, predicted: dict[str, float]) -> dict[str, float]:
+        """measured/predicted per component (1.0 when unmeasured)."""
+        out = {}
+        for name, pred in predicted.items():
+            m = self.measurements.get(name)
+            if m is not None and pred > 0:
+                out[name] = max(m.mean_s / pred, 1e-3)
+        return out
+
+
+class StepMonitor:
+    """EMA step-time drift detector -> re-profile trigger."""
+
+    def __init__(self, alpha: float = 0.1, drift_threshold: float = 0.25,
+                 min_steps: int = 20):
+        self.alpha = alpha
+        self.threshold = drift_threshold
+        self.min_steps = min_steps
+        self.ema: Optional[float] = None
+        self.baseline: Optional[float] = None
+        self.steps = 0
+
+    def update(self, step_time_s: float) -> bool:
+        """Record one step; returns True when drift warrants re-planning."""
+        self.steps += 1
+        self.ema = (step_time_s if self.ema is None
+                    else (1 - self.alpha) * self.ema + self.alpha * step_time_s)
+        if self.baseline is None and self.steps >= self.min_steps:
+            self.baseline = self.ema
+        if self.baseline is None or self.steps < self.min_steps:
+            return False
+        drift = abs(self.ema - self.baseline) / self.baseline
+        if drift > self.threshold:
+            self.baseline = self.ema      # re-arm after trigger
+            return True
+        return False

@@ -1,0 +1,2 @@
+from repro.data.pipeline import (SyntheticLM, SyntheticImages, Prefetcher,
+                                 HostShardedLoader)

@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, scale: float, causal: bool = True):
+    """q: (B,S,H,D); k,v: (B,T,H,D) (kv already expanded to q heads).
+    fp32 softmax, dense logits."""
+    B, S, H, D = q.shape
+    T = k.shape[1]
+    logits = jnp.einsum("bshd,bthd->bhst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.arange(S)[:, None] >= jnp.arange(T)[None, :]
+        logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhst,bthd->bshd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def ssd_scan_ref(x, Bm, Cm, dt, a, h0=None):
+    """Sequential (non-chunked) SSD recurrence — the ground truth.
+
+    x: (B,S,H,P); Bm,Cm: (B,S,H,N) (already per-head); dt,a: (B,S,H).
+    h_t = exp(a_t) h_{t-1} + dt_t * x_t ⊗ B_t ;  y_t = C_t · h_t
+    Returns (y (B,S,H,P) f32, h_final (B,H,P,N) f32).
+    """
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((B, H, P, N), jnp.float32)
+
+    def step(h, inp):
+        x_t, b_t, c_t, dt_t, a_t = inp
+        h = h * jnp.exp(a_t)[:, :, None, None] + \
+            jnp.einsum("bh,bhp,bhn->bhpn", dt_t, x_t, b_t)
+        y = jnp.einsum("bhpn,bhn->bhp", h, c_t)
+        return h, y
+
+    xs = tuple(jnp.moveaxis(t.astype(jnp.float32), 1, 0)
+               for t in (x, Bm, Cm, dt, a))
+    h_final, ys = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 1), h_final
+
+
+def rmsnorm_ref(x, scale, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+            ).astype(x.dtype)

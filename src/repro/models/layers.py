@@ -1,0 +1,350 @@
+"""Core neural-net layers, pure-functional JAX.
+
+Convention: every module is an ``init_*(key, ...) -> params`` plus an
+``apply`` function taking ``(params, x, ...)``.  Params are plain dicts so the
+ASA sharding layer can mirror them with PartitionSpec trees (see
+``core/sharding.py`` — spec builders are written alongside these inits and a
+property test asserts tree-structure equality).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+Params = dict
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def _normal(key, shape, dtype, stddev):
+    return (stddev * jax.random.truncated_normal(key, -2.0, 2.0, shape)).astype(dtype)
+
+
+def init_dense(key, d_in: int, d_out: int, *, bias: bool = False,
+               dtype=jnp.float32, scale: Optional[float] = None) -> Params:
+    stddev = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    p = {"w": _normal(key, (d_in, d_out), dtype, stddev)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p: Params, x: Array) -> Array:
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def init_rmsnorm(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: Params, x: Array, eps: float = 1e-6) -> Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(dt)
+
+
+def init_layernorm(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p: Params, x: Array, eps: float = 1e-5) -> Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float = 10000.0) -> Array:
+    """Inverse frequencies, shape (head_dim // 2,). float32."""
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponents)
+
+
+def apply_rope(x: Array, positions: Array, theta: float = 10000.0) -> Array:
+    """x: (..., seq, heads, head_dim); positions: broadcastable to (..., seq)."""
+    dt = x.dtype
+    hd = x.shape[-1]
+    inv = rope_frequencies(hd, theta)
+    angles = positions[..., :, None].astype(jnp.float32) * inv  # (..., S, hd/2)
+    angles = angles[..., None, :]                               # (..., S, 1, hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# attention (MHA / GQA / MQA, optional qk-norm, causal or bidirectional,
+# optional cross-attention, optional output gate)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    rope_theta: float = 10000.0
+    use_rope: bool = True
+    qk_norm: bool = False
+    causal: bool = True
+    bias: bool = False
+    gated: bool = False          # tanh-gated output (llama-vision cross blocks)
+    softmax_scale: Optional[float] = None
+
+    @property
+    def q_dim(self):
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self):
+        return self.n_kv_heads * self.head_dim
+
+
+def init_attention(key, cfg: AttnConfig, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 5)
+    p = {
+        "wq": init_dense(ks[0], cfg.d_model, cfg.q_dim, bias=cfg.bias, dtype=dtype),
+        "wk": init_dense(ks[1], cfg.d_model, cfg.kv_dim, bias=cfg.bias, dtype=dtype),
+        "wv": init_dense(ks[2], cfg.d_model, cfg.kv_dim, bias=cfg.bias, dtype=dtype),
+        "wo": init_dense(ks[3], cfg.q_dim, cfg.d_model, bias=cfg.bias, dtype=dtype,
+                         scale=1.0 / math.sqrt(cfg.q_dim)),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = init_rmsnorm(cfg.head_dim, dtype)
+        p["k_norm"] = init_rmsnorm(cfg.head_dim, dtype)
+    if cfg.gated:
+        p["gate"] = jnp.zeros((), dtype)
+    return p
+
+
+def _expand_kv(t: Array, n_heads: int) -> Array:
+    """(B,T,Hkv,D) -> (B,T,H,D) by broadcasting each kv head over its q-group.
+
+    Broadcast-then-reshape keeps the head axis shardable over `model` to the
+    same degree as q's head axis (the kv source is replicated when
+    Hkv < mesh model size — see core/sharding.py)."""
+    B, T, Hkv, D = t.shape
+    group = n_heads // Hkv
+    t = jnp.broadcast_to(t[:, :, :, None, :], (B, T, Hkv, group, D))
+    return t.reshape(B, T, n_heads, D)
+
+
+SDPA_CHUNK = 512          # q-block size for the chunked XLA path
+SDPA_CHUNK_THRESHOLD = 1024   # chunk when S*T exceeds threshold^2
+
+
+def _sdpa_dense(q, k, v, *, causal, scale, q_pos, kv_len):
+    B, S, H, D = q.shape
+    T = k.shape[1]
+    logits = jnp.einsum("bshd,bthd->bhst", q, k).astype(jnp.float32) * scale
+    mask = None
+    if causal:
+        qp = q_pos if q_pos is not None else jnp.arange(S)
+        kp = jnp.arange(T)
+        mask = qp[:, None] >= kp[None, :]          # (S, T)
+    if kv_len is not None:
+        valid = jnp.arange(T) < kv_len             # (T,)
+        mask = valid[None, :] if mask is None else (mask & valid[None, :])
+    if mask is not None:
+        logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhst,bthd->bshd", probs, v)
+
+
+def _sdpa_chunked(q, k, v, *, causal, scale, q_pos, kv_len,
+                  chunk=SDPA_CHUNK):
+    """Scan over query blocks: peak logits memory B*H*chunk*T instead of
+    B*H*S*T.  XLA lowers the scan body once; this is the memory-sane lowering
+    the dry-run uses for 4k-32k sequences (the Pallas kernel replaces it on
+    real TPUs)."""
+    B, S, H, D = q.shape
+    T = k.shape[1]
+    C = min(chunk, S)
+    pad = (-S) % C
+    qp = q_pos if q_pos is not None else jnp.arange(S)
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        qp = jnp.pad(qp, (0, pad), constant_values=-1)   # -1 => fully masked
+    nq = q.shape[1] // C
+    q_blocks = jnp.moveaxis(q.reshape(B, nq, C, H, D), 1, 0)
+    p_blocks = qp.reshape(nq, C)
+    kp = jnp.arange(T)
+
+    def body(_, xs):
+        qb, pb = xs                                      # (B,C,H,D), (C,)
+        lg = jnp.einsum("bchd,bthd->bhct", qb, k).astype(jnp.float32) * scale
+        if causal:
+            mask = pb[:, None] >= kp[None, :]
+        else:
+            mask = (pb[:, None] >= 0) & jnp.ones((1, T), bool)
+        if kv_len is not None:
+            mask = mask & (kp[None, :] < kv_len)
+        lg = jnp.where(mask[None, None], lg, -1e30)
+        pr = jax.nn.softmax(lg, axis=-1).astype(v.dtype)
+        ob = jnp.einsum("bhct,bthd->bchd", pr, v)
+        return 0.0, ob
+
+    _, out = jax.lax.scan(body, 0.0, (q_blocks, p_blocks))
+    out = jnp.moveaxis(out, 0, 1).reshape(B, nq * C, H, D)
+    return out[:, :S]
+
+
+def _sdpa(q: Array, k: Array, v: Array, *, causal: bool, scale: float,
+          q_pos: Optional[Array] = None, kv_len: Optional[Array] = None) -> Array:
+    """q: (B,S,H,D); k,v: (B,T,Hkv,D) with Hkv | H.  Pure-jnp reference path
+    (the 'xla' impl); auto-switches to the q-block-chunked form when the
+    logits tensor would be large.  ``kv_len`` masks slots >= kv_len."""
+    B, S, H, D = q.shape
+    T = k.shape[1]
+    k, v = _expand_kv(k.astype(q.dtype), H), _expand_kv(v.astype(q.dtype), H)
+    if S * T > SDPA_CHUNK_THRESHOLD ** 2 and S > SDPA_CHUNK:
+        return _sdpa_chunked(q, k, v, causal=causal, scale=scale,
+                             q_pos=q_pos, kv_len=kv_len)
+    return _sdpa_dense(q, k, v, causal=causal, scale=scale,
+                       q_pos=q_pos, kv_len=kv_len)
+
+
+def attention(p: Params, cfg: AttnConfig, x: Array, *,
+              kv_input: Optional[Array] = None,
+              cache: Optional[Params] = None,
+              positions: Optional[Array] = None,
+              impl: str = "xla") -> tuple[Array, Optional[Params]]:
+    """Self- or cross-attention.
+
+    cache (decode): {"k": (B,T,Hkv,D), "v": ..., "pos": scalar int32} — new
+    k/v written at ``pos``; returns updated cache.  For cross-attention the
+    cache holds precomputed encoder K/V and is not updated.
+    """
+    B, S, _ = x.shape
+    src = kv_input if kv_input is not None else x
+    q = dense(p["wq"], x).reshape(B, S, cfg.n_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q)
+    scale = cfg.softmax_scale or (1.0 / math.sqrt(cfg.head_dim))
+
+    is_cross = kv_input is not None or (cache is not None and "pos" not in cache)
+    if is_cross:
+        if kv_input is not None:      # compute (and possibly store) cross K/V
+            T = kv_input.shape[1]
+            k = dense(p["wk"], kv_input).reshape(B, T, cfg.n_kv_heads, cfg.head_dim)
+            v = dense(p["wv"], kv_input).reshape(B, T, cfg.n_kv_heads, cfg.head_dim)
+            if cfg.qk_norm:
+                k = rmsnorm(p["k_norm"], k)
+            new_cache = ({"k": k.astype(cache["k"].dtype),
+                          "v": v.astype(cache["v"].dtype)}
+                         if cache is not None else None)
+        else:                          # precomputed cross K/V from the cache
+            k, v = cache["k"], cache["v"]
+            new_cache = cache
+        if cfg.use_rope:
+            q = apply_rope(q, positions if positions is not None else jnp.arange(S),
+                           cfg.rope_theta)
+        out = _sdpa(q, k.astype(q.dtype), v.astype(q.dtype), causal=False, scale=scale)
+    else:
+        k = dense(p["wk"], src).reshape(B, src.shape[1], cfg.n_kv_heads, cfg.head_dim)
+        v = dense(p["wv"], src).reshape(B, src.shape[1], cfg.n_kv_heads, cfg.head_dim)
+        if cfg.qk_norm:
+            k = rmsnorm(p["k_norm"], k)
+        if cache is not None and "pos" in cache:
+            # decode: write k/v at cache["pos"], attend to the full prefix
+            pos = cache["pos"]
+            if cfg.use_rope:
+                pp = jnp.full((S,), 0, jnp.int32) + pos + jnp.arange(S)
+                q = apply_rope(q, pp, cfg.rope_theta)
+                k = apply_rope(k, pp, cfg.rope_theta)
+            ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), pos, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), pos, axis=1)
+            out = _sdpa(q, ck, cv, causal=True, scale=scale,
+                        q_pos=pos + jnp.arange(S), kv_len=pos + S)
+            new_cache = {"k": ck, "v": cv, "pos": pos + S}
+        else:
+            if positions is None:
+                positions = jnp.arange(S)
+            if cfg.use_rope:
+                q = apply_rope(q, positions, cfg.rope_theta)
+                k = apply_rope(k, positions, cfg.rope_theta)
+            if impl == "pallas" and cfg.causal and kv_input is None:
+                from repro.kernels import ops as kops
+                out = kops.flash_attention(q, k, v, scale=scale)
+            else:
+                out = _sdpa(q, k, v, causal=cfg.causal, scale=scale)
+            new_cache = None
+    y = dense(p["wo"], out.reshape(B, S, cfg.q_dim))
+    if cfg.gated:
+        y = jnp.tanh(p["gate"].astype(y.dtype)) * y
+    return y, new_cache
+
+
+def init_attention_cache(cfg: AttnConfig, batch: int, max_len: int,
+                         dtype=jnp.bfloat16) -> Params:
+    shp = (batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype),
+            "pos": jnp.zeros((), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# MLPs: SwiGLU / GeGLU / plain GELU
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, *, act: str = "silu",
+             bias: bool = False, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 3)
+    p = {"w_in": init_dense(ks[0], d_model, d_ff, bias=bias, dtype=dtype),
+         "w_out": init_dense(ks[2], d_ff, d_model, bias=bias, dtype=dtype,
+                             scale=1.0 / math.sqrt(d_ff))}
+    if act in ("silu", "geglu"):  # gated variants carry a second in-proj
+        p["w_gate"] = init_dense(ks[1], d_model, d_ff, bias=bias, dtype=dtype)
+    return p
+
+
+def mlp(p: Params, x: Array, act: str = "silu") -> Array:
+    h = dense(p["w_in"], x)
+    if act == "silu":
+        h = jax.nn.silu(dense(p["w_gate"], x)) * h
+    elif act == "geglu":
+        h = jax.nn.gelu(dense(p["w_gate"], x), approximate=True) * h
+    elif act == "gelu":
+        h = jax.nn.gelu(h, approximate=True)
+    elif act == "relu":
+        h = jax.nn.relu(h)
+    else:
+        raise ValueError(act)
+    return dense(p["w_out"], h)
+
+
+# ---------------------------------------------------------------------------
+# embeddings & head
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, vocab: int, d_model: int, dtype=jnp.float32) -> Params:
+    return {"embedding": _normal(key, (vocab, d_model), dtype, 1.0)}
+
+
+def embed(p: Params, tokens: Array, d_model: int) -> Array:
+    return jnp.take(p["embedding"], tokens, axis=0) * (d_model ** 0.5)
+
+
+def unembed(p: Params, x: Array) -> Array:
+    """Tied head: logits = x @ E^T (fp32 accumulation)."""
+    return jnp.einsum("bsd,vd->bsv", x, p["embedding"]).astype(jnp.float32)

@@ -1,0 +1,141 @@
+"""Mixture-of-Experts layer (GShard-style dense dispatch, TPU-friendly).
+
+Routing variants:
+  * softmax top-k (Arctic)                      — ``router="softmax"``
+  * sigmoid score + top-k + renormalize (DSv3)  — ``router="sigmoid"``
+Optional: shared expert(s) always active (DeepSeek-V3), dense residual FFN in
+parallel with the MoE branch (Arctic).
+
+Dispatch is the capacity-based one-hot einsum (no sort/gather) so it shards
+cleanly under GSPMD: experts live on the ``model`` axis (EP), tokens on
+``data``.  Dropped tokens (over capacity) fall back to the residual stream.
+
+EP-major mode (launcher-set, EXPERIMENTS.md §Perf): when weights+batch share
+the ``data`` axis, expert-tensor sharding forces GSPMD to re-gather expert
+weights per use (observed 12 TB/device on arctic-480b).  Setting
+``EP_CONSTRAINTS = ("data", "model")`` pins the dispatched token block to an
+expert-major layout — experts over ``data``, expert-FF over ``model`` — so
+GSPMD lowers dispatch/combine as all-to-alls (GShard) and weights stay put.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as L
+
+Params = dict
+Array = jax.Array
+
+# (expert_axis, ff_axis, batch_axes) or None — set by the launcher before
+# lowering; requires an ambient mesh (jax.set_mesh) when set.
+EP_CONSTRAINTS: Optional[tuple] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    d_model: int
+    d_ff: int                  # per-expert hidden dim
+    n_experts: int
+    top_k: int
+    router: str = "softmax"    # or "sigmoid"
+    capacity_factor: float = 1.25
+    n_shared_experts: int = 0  # always-active shared experts (DSv3: 1)
+    shared_d_ff: int = 0       # hidden dim of the shared expert branch
+    dense_d_ff: int = 0        # parallel dense residual FFN (Arctic)
+    act: str = "silu"
+    aux_loss_weight: float = 0.01
+
+
+def init_moe(key, cfg: MoEConfig, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 6)
+    E, D, F = cfg.n_experts, cfg.d_model, cfg.d_ff
+    s_in = 1.0 / math.sqrt(D)
+    s_out = 1.0 / math.sqrt(F)
+
+    def estack(k, shape, stddev):
+        return L._normal(k, shape, dtype, stddev)
+
+    p = {
+        "router": {"w": L._normal(ks[0], (D, E), jnp.float32, s_in)},
+        "w_in": estack(ks[1], (E, D, F), s_in),     # expert-stacked
+        "w_gate": estack(ks[2], (E, D, F), s_in),
+        "w_out": estack(ks[3], (E, F, D), s_out),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = L.init_mlp(ks[4], D, cfg.shared_d_ff or F * cfg.n_shared_experts,
+                                 act=cfg.act, dtype=dtype)
+    if cfg.dense_d_ff:
+        p["dense"] = L.init_mlp(ks[5], D, cfg.dense_d_ff, act=cfg.act, dtype=dtype)
+    return p
+
+
+def _act(h: Array, g: Array, act: str) -> Array:
+    if act == "silu":
+        return jax.nn.silu(g) * h
+    if act == "geglu":
+        return jax.nn.gelu(g, approximate=True) * h
+    raise ValueError(act)
+
+
+def moe(p: Params, cfg: MoEConfig, x: Array) -> tuple[Array, Array]:
+    """x: (B, S, D) -> (out, aux_loss).  Tokens grouped per (B) row."""
+    if EP_CONSTRAINTS is not None:
+        ep_ax, ff_ax, batch_axes = EP_CONSTRAINTS
+        # NOTE: an explicit "un-shard seq at entry" constraint here measured
+        # WORSE (13.6 vs 11.1 TB/dev on arctic — §Perf): GSPMD's own
+        # placement of the seq gather inside the dispatch einsum beats a
+        # forced boundary reshard.  Keep propagation free at entry.
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    C = max(1, int(cfg.capacity_factor * K * S / E))  # per-group expert capacity
+
+    scores = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["router"]["w"])
+    if cfg.router == "softmax":
+        probs = jax.nn.softmax(scores, axis=-1)
+    else:  # sigmoid + renormalize among selected (DeepSeek-V3 style)
+        probs = jax.nn.sigmoid(scores)
+
+    gate_vals, idx = jax.lax.top_k(probs, K)            # (B,S,K)
+    if cfg.router == "sigmoid":
+        gate_vals = gate_vals / (jnp.sum(gate_vals, -1, keepdims=True) + 1e-9)
+    else:
+        gate_vals = gate_vals / (jnp.sum(gate_vals, -1, keepdims=True) + 1e-9)
+
+    # position of each (token, k) inside its expert's buffer
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.int32)            # (B,S,K,E)
+    pos_in_expert = (jnp.cumsum(onehot.reshape(B, S * K, E), axis=1)
+                     .reshape(B, S, K, E) - 1)
+    keep = (pos_in_expert < C) & (onehot > 0)                   # capacity mask
+    # dispatch tensor (B,S,E,C): token s -> slot (e, c)
+    pos_oh = jax.nn.one_hot(jnp.where(keep, pos_in_expert, -1), C, dtype=x.dtype)
+    disp = jnp.einsum("bske,bskec->bsec", onehot.astype(x.dtype), pos_oh)
+    comb = jnp.einsum("bsk,bske,bskec->bsec",
+                      gate_vals.astype(x.dtype), onehot.astype(x.dtype), pos_oh)
+
+    xe = jnp.einsum("bsd,bsec->becd", x, disp)                  # (B,E,C,D)
+    if EP_CONSTRAINTS is not None:
+        # expert-major: the dispatch becomes an all-to-all (B@ep -> E@ep)
+        xe = jax.lax.with_sharding_constraint(xe, P(None, ep_ax, None, None))
+    h = jnp.einsum("becd,edf->becf", xe, p["w_in"].astype(x.dtype))
+    g = jnp.einsum("becd,edf->becf", xe, p["w_gate"].astype(x.dtype))
+    ye = jnp.einsum("becf,efd->becd", _act(h, g, cfg.act), p["w_out"].astype(x.dtype))
+    if EP_CONSTRAINTS is not None:
+        ye = jax.lax.with_sharding_constraint(ye, P(None, ep_ax, None, None))
+    out = jnp.einsum("becd,bsec->bsd", ye, comb)
+
+    if cfg.n_shared_experts:
+        out = out + L.mlp(p["shared"], x, cfg.act)
+    if cfg.dense_d_ff:
+        out = out + L.mlp(p["dense"], x, cfg.act)
+
+    # load-balance aux loss (Switch-style): E * sum_e f_e * p_e
+    me = jnp.mean(onehot.astype(jnp.float32).sum(2), axis=(0, 1))   # fraction routed
+    pe = jnp.mean(probs, axis=(0, 1))
+    aux = cfg.aux_loss_weight * E * jnp.sum(me * pe / K)
+    return out, aux

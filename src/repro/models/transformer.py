@@ -1,0 +1,283 @@
+"""StackedLM: composes an ArchConfig's segment pattern into init/apply.
+
+Homogeneous segments are `lax.scan`ned over their repeat count (params stacked
+on a leading axis) to keep HLO size and dry-run compile time bounded for
+54-100-layer architectures.  Heterogeneous patterns (hybrid/VLM) are segments
+whose body applies several block kinds in order.
+
+Entry points:
+  init_lm(key, arch)                          -> params
+  init_cache(arch, batch, max_len, dtype)     -> cache
+  lm_apply(params, arch, tokens, ...)         -> LMOutput(logits, cache, aux, hidden)
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import blocks as B
+from repro.models import layers as L
+
+Params = dict
+Array = jax.Array
+
+
+class LMOutput(NamedTuple):
+    logits: Array
+    cache: Optional[Any]
+    aux: Array                       # scalar auxiliary loss (MoE balance, ...)
+    hidden: Optional[Array] = None   # pre-head hidden states (for MTP)
+
+
+def _compute_dtype(arch: ArchConfig):
+    return jnp.bfloat16 if arch.dtype == "bfloat16" else jnp.float32
+
+
+def _param_dtype(arch: ArchConfig):
+    return jnp.float32 if arch.param_dtype == "float32" else jnp.bfloat16
+
+
+def sinusoidal_at(positions: Array, d_model: int) -> Array:
+    """Sinusoidal embeddings for arbitrary integer positions: (S,) -> (S, D)."""
+    pos = positions.astype(jnp.float32)[:, None]
+    dim = jnp.arange(0, d_model, 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10000.0, dim / d_model)
+    pe = jnp.zeros((positions.shape[0], d_model))
+    pe = pe.at[:, 0::2].set(jnp.sin(angle))
+    pe = pe.at[:, 1::2].set(jnp.cos(angle))
+    return pe
+
+
+def sinusoidal_positions(seq_len: int, d_model: int) -> Array:
+    return sinusoidal_at(jnp.arange(seq_len), d_model)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_lm(key, arch: ArchConfig) -> Params:
+    dt = _param_dtype(arch)
+    n_seg = len(arch.pattern)
+    ks = jax.random.split(key, n_seg + 5)
+    params: Params = {
+        "embed": L.init_embedding(ks[0], arch.padded_vocab, arch.d_model, dt),
+        "final_norm": B.norm_init(arch, arch.d_model, dt),
+    }
+    if not arch.tie_embeddings:
+        params["head"] = L.init_dense(ks[1], arch.d_model, arch.padded_vocab, dtype=dt)
+    if any("shared_attn" in seg.blocks for seg in arch.pattern):
+        params["shared"] = B.init_shared(ks[2], arch, dt)
+    if arch.encoder is not None:
+        enc_keys = jax.random.split(ks[3], 1)[0]
+        params["encoder"] = {
+            "segments": [_init_segment(enc_keys, ("enc_attn",),
+                                       arch.encoder.n_layers, arch, dt)],
+            "final_norm": B.norm_init(arch, arch.d_model, dt),
+        }
+    if arch.mtp:
+        params["mtp"] = {
+            "proj": L.init_dense(ks[4], 2 * arch.d_model, arch.d_model, dtype=dt),
+            "block": B.init_block(jax.random.fold_in(ks[4], 1), "attn", arch, dt),
+            "norm": B.norm_init(arch, arch.d_model, dt),
+        }
+    params["segments"] = [
+        _init_segment(ks[5 + i], seg.blocks, seg.repeat, arch, dt)
+        for i, seg in enumerate(arch.pattern)
+    ]
+    return params
+
+
+def _init_segment(key, blocks: tuple, repeat: int, arch: ArchConfig, dt) -> Params:
+    """Params stacked along a leading `repeat` axis (scan xs)."""
+    def one(k):
+        kk = jax.random.split(k, len(blocks))
+        return {f"b{i}": B.init_block(kk[i], kind, arch, dt)
+                for i, kind in enumerate(blocks)}
+    return jax.vmap(one)(jax.random.split(key, repeat))
+
+
+def init_cache(arch: ArchConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> list:
+    """Per-segment stacked caches (leading repeat axis)."""
+    caches = []
+    for seg in arch.pattern:
+        def one(_):
+            return {f"b{i}": B.init_block_cache(kind, arch, batch, max_len, dtype)
+                    for i, kind in enumerate(seg.blocks)}
+        stacked = jax.tree.map(
+            lambda *xs: jnp.stack(xs), *[one(r) for r in range(seg.repeat)]) \
+            if seg.repeat > 1 else jax.tree.map(lambda x: x[None], one(0))
+        caches.append(stacked)
+    return caches
+
+
+# ---------------------------------------------------------------------------
+# apply
+# ---------------------------------------------------------------------------
+
+REMAT_POLICIES = {
+    "none": None,
+    "full": "everything",
+    "selective": "dots",        # save matmul outputs w/o batch dims (MaxText-style)
+}
+
+
+def _constrain(x, act_sharding):
+    """Pin the layer-boundary activation sharding (GSPMD loses the batch
+    sharding inside checkpointed scan bodies otherwise — production
+    frameworks always constrain layer inputs)."""
+    if act_sharding is None or x is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, act_sharding)
+
+
+def _apply_segment(seg_params, blocks, arch, x, *, seg_cache=None, x0=None,
+                   cross_input=None, shared=None, positions=None, impl="xla",
+                   unroll: int = 1, remat: str = "none", act_sharding=None):
+    """Scan the segment body over its repeat axis.  ``remat`` applies
+    per-layer activation checkpointing inside the scan (the standard
+    scan-over-layers + remat pattern — O(1) activation memory in depth)."""
+    has_cache = seg_cache is not None
+
+    def body(carry, xs):
+        x, aux = carry
+        x = _constrain(x, act_sharding)
+        p_stack, c_stack = xs if has_cache else (xs, None)
+        new_caches = {}
+        for i, kind in enumerate(blocks):
+            bi = f"b{i}"
+            c = c_stack[bi] if has_cache else None
+            x, nc, a = B.apply_block(
+                p_stack[bi], kind, arch, x, x0=x0, cross_input=cross_input,
+                shared=shared, cache=c, positions=positions, impl=impl)
+            if has_cache:
+                new_caches[bi] = nc
+            aux = aux + a
+        x = _constrain(x, act_sharding)
+        return (x, aux), (new_caches if has_cache else B.ZERO)
+
+    if remat != "none" and not has_cache:
+        policy = (None if remat == "full" else
+                  jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+        body = jax.checkpoint(body, policy=policy)
+
+    xs = (seg_params, seg_cache) if has_cache else seg_params
+    (x, aux), ys = jax.lax.scan(body, (x, B.ZERO), xs, unroll=unroll)
+    return x, aux, (ys if has_cache else None)
+
+
+def lm_apply(params: Params, arch: ArchConfig, tokens: Optional[Array] = None, *,
+             cache: Optional[list] = None,
+             frontend: Optional[Array] = None,
+             positions: Optional[Array] = None,
+             impl: str = "xla",
+             remat: str = "none",
+             act_sharding=None,
+             return_hidden: bool = False) -> LMOutput:
+    """Forward pass.
+
+    tokens: (B, S) int32 — LM/decoder tokens (None for pure-frontend encoders).
+    cache:  per-segment stacked caches; None => training forward.
+    frontend: precomputed modality embeddings —
+       vlm:   (B, n_img_tokens, d_model) patch embeddings -> cross-attn input
+       audio: (B, enc_len, d_model) frame embeddings -> encoder input
+    """
+    cdt = _compute_dtype(arch)
+    aux_total = B.ZERO
+
+    cross_input = None
+    if arch.frontend == "vision" and frontend is not None:
+        cross_input = frontend.astype(cdt)
+    if arch.frontend == "audio" and frontend is not None:
+        enc = frontend.astype(cdt)
+        enc = enc + sinusoidal_positions(enc.shape[1], arch.d_model).astype(cdt)
+        enc_p = params["encoder"]
+        for segp in enc_p["segments"]:
+            enc, aux, _ = _apply_segment(segp, ("enc_attn",), arch, enc,
+                                         impl=impl, remat=remat,
+                                         act_sharding=act_sharding)
+            aux_total = aux_total + aux
+        cross_input = B.norm_apply(arch, enc_p["final_norm"], enc)
+
+    x = L.embed(params["embed"], tokens, arch.d_model).astype(cdt)
+    if arch.encoder is not None:   # whisper decoder: absolute sinusoidal positions
+        if cache is None:
+            pe = sinusoidal_positions(x.shape[1], arch.d_model)
+        else:  # decode: offset from the first wdec self-attn cache position
+            pos0 = cache[0]["b0"]["self"]["pos"][0]
+            pe = sinusoidal_at(pos0 + jnp.arange(x.shape[1]), arch.d_model)
+        x = x + pe.astype(cdt)
+
+    if positions is None and cache is None:
+        positions = jnp.arange(x.shape[1])
+
+    x = _constrain(x, act_sharding)
+    x0 = x  # original embeddings (zamba2 shared-block input)
+    new_caches = []
+    for si, seg in enumerate(arch.pattern):
+        seg_cache = cache[si] if cache is not None else None
+        x, aux, nc = _apply_segment(
+            params["segments"][si], seg.blocks, arch, x,
+            seg_cache=seg_cache, x0=x0, cross_input=cross_input,
+            shared=params.get("shared"), positions=positions, impl=impl,
+            remat=remat, act_sharding=act_sharding)
+        aux_total = aux_total + aux
+        new_caches.append(nc)
+
+    hidden = B.norm_apply(arch, params["final_norm"], x)
+    if arch.tie_embeddings:
+        logits = L.unembed(params["embed"], hidden)
+    else:
+        logits = L.dense(params["head"], hidden).astype(jnp.float32)
+
+    return LMOutput(logits, new_caches if cache is not None else None,
+                    aux_total, hidden if return_hidden else None)
+
+
+def mtp_logits(params: Params, arch: ArchConfig, hidden: Array,
+               tokens: Array) -> Array:
+    """DeepSeek-V3-style multi-token prediction head (depth 1): combine the
+    final hidden state at position t with the embedding of token t+1 to
+    predict token t+2.  Returns logits (B, S, V) aligned so that
+    logits[:, t] predicts tokens[:, t+2]."""
+    mtp = params["mtp"]
+    cdt = hidden.dtype
+    emb_next = L.embed(params["embed"], jnp.roll(tokens, -1, axis=1),
+                       arch.d_model).astype(cdt)
+    h = L.dense(mtp["proj"], jnp.concatenate(
+        [B.norm_apply(arch, mtp["norm"], hidden), emb_next], axis=-1))
+    h, _, _ = B.apply_block(mtp["block"], "attn", arch, h,
+                            positions=jnp.arange(h.shape[1]))
+    return L.unembed(params["embed"], h) if arch.tie_embeddings \
+        else L.dense(params["head"], h).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+def lm_loss(logits: Array, labels: Array, vocab: int,
+            mask: Optional[Array] = None) -> Array:
+    """Cross-entropy with padded-vocab masking (labels < vocab always).
+
+    Vocab-parallel formulation: only reductions touch the (possibly
+    `model`-sharded) vocab axis — no gather, so GSPMD lowers to partial
+    reductions + tiny (B,S) all-reduces instead of all-gathering the fp32
+    logits (Megatron's vocab-parallel cross-entropy)."""
+    V = logits.shape[-1]
+    logits = logits.astype(jnp.float32)
+    vid = jax.lax.broadcasted_iota(jnp.int32, (1, 1, V), 2)
+    if V > vocab:   # mask padding logits out of the softmax
+        logits = jnp.where(vid < vocab, logits, -1e30)
+    m = jnp.max(logits, axis=-1)
+    lse = m + jnp.log(jnp.sum(jnp.exp(logits - m[..., None]), axis=-1))
+    tgt_mask = vid == labels[..., None]
+    tgt = jnp.sum(jnp.where(tgt_mask, logits, 0.0), axis=-1)
+    nll = lse - tgt
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

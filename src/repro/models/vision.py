@@ -1,0 +1,177 @@
+"""Paper's own models: ViT-B/16 and ResNet-50 with CIFAR-100 heads.
+
+These reproduce the paper's experimental setting (Section IV-A).  Both expose
+``components()`` metadata consumed by the ASA cost model (benchmarks) in the
+same way the LM archs do.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+Params = dict
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# ViT
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ViTConfig:
+    image_size: int = 32          # CIFAR-100
+    patch: int = 4                # 32/4 = 8x8 = 64 patches (paper uses /16 at 224)
+    d_model: int = 768
+    n_layers: int = 12
+    n_heads: int = 12
+    d_ff: int = 3072
+    n_classes: int = 100
+    dtype: str = "float32"
+
+    @property
+    def n_patches(self):
+        return (self.image_size // self.patch) ** 2
+
+
+def init_vit(key, cfg: ViTConfig) -> Params:
+    dt = jnp.float32 if cfg.dtype == "float32" else jnp.bfloat16
+    ks = jax.random.split(key, cfg.n_layers + 4)
+    patch_dim = 3 * cfg.patch * cfg.patch
+    acfg = L.AttnConfig(d_model=cfg.d_model, n_heads=cfg.n_heads,
+                        n_kv_heads=cfg.n_heads,
+                        head_dim=cfg.d_model // cfg.n_heads,
+                        use_rope=False, causal=False, bias=True)
+
+    def layer(k):
+        kk = jax.random.split(k, 2)
+        return {"norm1": L.init_layernorm(cfg.d_model, dt),
+                "attn": L.init_attention(kk[0], acfg, dt),
+                "norm2": L.init_layernorm(cfg.d_model, dt),
+                "mlp": L.init_mlp(kk[1], cfg.d_model, cfg.d_ff, act="gelu",
+                                  bias=True, dtype=dt)}
+
+    return {
+        "patch_proj": L.init_dense(ks[0], patch_dim, cfg.d_model, bias=True, dtype=dt),
+        "cls": L._normal(ks[1], (1, 1, cfg.d_model), dt, 0.02),
+        "pos": L._normal(ks[2], (1, cfg.n_patches + 1, cfg.d_model), dt, 0.02),
+        "layers": jax.vmap(layer)(jax.random.split(ks[3], cfg.n_layers)),
+        "final_norm": L.init_layernorm(cfg.d_model, dt),
+        "head": L.init_dense(ks[-1], cfg.d_model, cfg.n_classes, bias=True, dtype=dt),
+    }
+
+
+def vit_apply(params: Params, cfg: ViTConfig, images: Array) -> Array:
+    """images: (B, H, W, 3) -> logits (B, n_classes)."""
+    Bsz = images.shape[0]
+    p = cfg.patch
+    g = cfg.image_size // p
+    x = images.reshape(Bsz, g, p, g, p, 3).transpose(0, 1, 3, 2, 4, 5)
+    x = x.reshape(Bsz, g * g, p * p * 3)
+    x = L.dense(params["patch_proj"], x)
+    cls = jnp.broadcast_to(params["cls"], (Bsz, 1, cfg.d_model))
+    x = jnp.concatenate([cls, x], axis=1) + params["pos"]
+
+    acfg = L.AttnConfig(d_model=cfg.d_model, n_heads=cfg.n_heads,
+                        n_kv_heads=cfg.n_heads,
+                        head_dim=cfg.d_model // cfg.n_heads,
+                        use_rope=False, causal=False, bias=True)
+
+    def body(x, lp):
+        h, _ = L.attention(lp["attn"], acfg, L.layernorm(lp["norm1"], x))
+        x = x + h
+        x = x + L.mlp(lp["mlp"], L.layernorm(lp["norm2"], x), "gelu")
+        return x, 0.0
+
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    x = L.layernorm(params["final_norm"], x)
+    return L.dense(params["head"], x[:, 0]).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# ResNet-50 (BN with batch statistics; CIFAR stem)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ResNetConfig:
+    stage_sizes: tuple = (3, 4, 6, 3)   # ResNet-50
+    width: int = 64
+    n_classes: int = 100
+    image_size: int = 32
+
+
+def _init_conv(key, kh, kw, cin, cout) -> Params:
+    fan_in = kh * kw * cin
+    return {"w": L._normal(key, (kh, kw, cin, cout), jnp.float32,
+                           math.sqrt(2.0 / fan_in))}
+
+
+def _conv(p, x, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, p["w"], (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _init_bn(c) -> Params:
+    return {"scale": jnp.ones((c,)), "bias": jnp.zeros((c,))}
+
+
+def _bn(p, x, eps=1e-5):
+    mu = jnp.mean(x, axis=(0, 1, 2), keepdims=True)
+    var = jnp.var(x, axis=(0, 1, 2), keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+
+
+def _init_bottleneck(key, cin, cmid, cout, stride) -> Params:
+    ks = jax.random.split(key, 4)
+    p = {"conv1": _init_conv(ks[0], 1, 1, cin, cmid), "bn1": _init_bn(cmid),
+         "conv2": _init_conv(ks[1], 3, 3, cmid, cmid), "bn2": _init_bn(cmid),
+         "conv3": _init_conv(ks[2], 1, 1, cmid, cout), "bn3": _init_bn(cout)}
+    if stride != 1 or cin != cout:
+        p["proj"] = _init_conv(ks[3], 1, 1, cin, cout)
+        p["proj_bn"] = _init_bn(cout)
+    return p
+
+
+def _bottleneck(p, x, stride):
+    r = x
+    y = jax.nn.relu(_bn(p["bn1"], _conv(p["conv1"], x)))
+    y = jax.nn.relu(_bn(p["bn2"], _conv(p["conv2"], y, stride)))
+    y = _bn(p["bn3"], _conv(p["conv3"], y))
+    if "proj" in p:
+        r = _bn(p["proj_bn"], _conv(p["proj"], x, stride))
+    return jax.nn.relu(y + r)
+
+
+def init_resnet(key, cfg: ResNetConfig) -> Params:
+    ks = jax.random.split(key, 2 + len(cfg.stage_sizes))
+    params = {"stem": _init_conv(ks[0], 3, 3, 3, cfg.width),
+              "stem_bn": _init_bn(cfg.width)}
+    cin = cfg.width
+    for s, n_blocks in enumerate(cfg.stage_sizes):
+        cmid = cfg.width * (2 ** s)
+        cout = cmid * 4
+        bkeys = jax.random.split(ks[1 + s], n_blocks)
+        blocks = []
+        for b in range(n_blocks):
+            stride = 2 if (b == 0 and s > 0) else 1
+            blocks.append(_init_bottleneck(bkeys[b], cin, cmid, cout, stride))
+            cin = cout
+        params[f"stage{s}"] = blocks
+    params["head"] = L.init_dense(ks[-1], cin, cfg.n_classes, bias=True)
+    return params
+
+
+def resnet_apply(params: Params, cfg: ResNetConfig, images: Array) -> Array:
+    x = jax.nn.relu(_bn(params["stem_bn"], _conv(params["stem"], images)))
+    for s, n_blocks in enumerate(cfg.stage_sizes):
+        for b in range(n_blocks):
+            stride = 2 if (b == 0 and s > 0) else 1
+            x = _bottleneck(params[f"stage{s}"][b], x, stride)
+    x = jnp.mean(x, axis=(1, 2))
+    return L.dense(params["head"], x).astype(jnp.float32)

@@ -1,0 +1,4 @@
+from repro.optim.optimizers import (adamw, sgd_momentum, OptState,
+                                    apply_updates, global_norm, clip_by_global_norm)
+from repro.optim.schedules import cosine_schedule, linear_warmup
+from repro.optim.quantized import QuantizedMoments, quantize_moments, dequantize_moments

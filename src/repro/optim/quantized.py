@@ -1,0 +1,70 @@
+"""Int8 optimizer-state quantization (blockwise absmax, Adam moments at
+1 byte each) — the memory trick that fits 480B/671B-param training states on
+a 256-chip pod (EXPERIMENTS.md §Dry-run).
+
+Each moment leaf becomes a ``QLeaf`` pytree node (int8 payload + fp32
+per-block scales; shape/sign static) so the whole optimizer state stays a
+jit-compatible pytree that shards like the parameters.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+@jax.tree_util.register_pytree_node_class
+class QLeaf:
+    def __init__(self, q, scale, shape, signed):
+        self.q = q              # int8 (n_blocks, BLOCK)
+        self.scale = scale      # fp32 (n_blocks, 1)
+        self.shape = tuple(shape)
+        self.signed = bool(signed)
+
+    def tree_flatten(self):
+        return (self.q, self.scale), (self.shape, self.signed)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        q, scale = children
+        return cls(q, scale, aux[0], aux[1])
+
+    @classmethod
+    def from_dense(cls, x: jax.Array, signed: bool) -> "QLeaf":
+        flat = x.astype(jnp.float32).reshape(-1)
+        pad = (-flat.size) % BLOCK
+        flat = jnp.pad(flat, (0, pad))
+        blocks = flat.reshape(-1, BLOCK)
+        absmax = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) + 1e-12
+        if signed:
+            q = jnp.clip(jnp.round(blocks / absmax * 127), -127, 127)
+        else:
+            q = jnp.clip(jnp.round(blocks / absmax * 255) - 128, -128, 127)
+        return cls(q.astype(jnp.int8), absmax, x.shape, signed)
+
+    def dense(self) -> jax.Array:
+        if self.signed:
+            blocks = self.q.astype(jnp.float32) / 127.0 * self.scale
+        else:
+            blocks = (self.q.astype(jnp.float32) + 128.0) / 255.0 * self.scale
+        n = math.prod(self.shape) if self.shape else 1
+        return blocks.reshape(-1)[:n].reshape(self.shape)
+
+
+QuantizedMoments = Any  # pytree with QLeaf leaves
+
+
+def _is_qleaf(x):
+    return isinstance(x, QLeaf)
+
+
+def quantize_moments(tree, *, signed: bool):
+    return jax.tree.map(lambda x: QLeaf.from_dense(x, signed), tree)
+
+
+def dequantize_moments(tree):
+    return jax.tree.map(lambda q: q.dense(), tree, is_leaf=_is_qleaf)

@@ -1,0 +1,23 @@
+"""LR schedules (pure functions of the int32 step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup(peak_lr: float, warmup_steps: int):
+    def fn(step):
+        return peak_lr * jnp.minimum(1.0, step.astype(jnp.float32)
+                                     / max(warmup_steps, 1))
+    return fn
+
+
+def cosine_schedule(peak_lr: float, warmup_steps: int, total_steps: int,
+                    min_ratio: float = 0.1):
+    def fn(step):
+        t = step.astype(jnp.float32)
+        warm = t / max(warmup_steps, 1)
+        prog = jnp.clip((t - warmup_steps) / max(total_steps - warmup_steps, 1),
+                        0.0, 1.0)
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return peak_lr * jnp.where(t < warmup_steps, warm, cos)
+    return fn

@@ -1,0 +1,108 @@
+"""Serving runtime: batched prefill + decode in synchronized waves.
+
+A wave = up to `slots` requests, prompts right-aligned/padded to a common
+length, one batched prefill, then lock-step decode until every request in
+the wave finished (early finishers are masked).  Wave scheduling keeps the
+shared per-layer cache position scalar correct; per-slot positions (true
+continuous batching) are future work and orthogonal to the ASA contribution.
+
+The ASA plan supplies param/cache shardings (decode picks MP — KV cache
+time-sharded over `model`; see core/sharding.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.core.asa import AdaptiveScheduler
+from repro.launch.mesh import mesh_shape_of
+from repro.models import transformer as T
+from repro.runtime import steps as ST
+
+
+@dataclasses.dataclass
+class Request:
+    id: int
+    prompt: np.ndarray               # (S,) int32
+    max_new_tokens: int = 16
+    out_tokens: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class Server:
+    def __init__(self, arch: ArchConfig, params, mesh, *,
+                 slots: int = 4, max_len: int = 512,
+                 scheduler: Optional[AdaptiveScheduler] = None):
+        self.arch, self.params, self.mesh = arch, params, mesh
+        self.slots, self.max_len = slots, max_len
+        ms = mesh_shape_of(mesh)
+        shape = ShapeSpec("serve", max_len, slots, "decode")
+        sched = scheduler or AdaptiveScheduler(faithful=False)
+        self.plan = sched.plan(arch, shape, ms)
+        self._cache_ns = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                                      self.plan.cache_specs(slots))
+        self._cdtype = jnp.float32 if arch.dtype == "float32" else jnp.bfloat16
+        self._prefill = jax.jit(ST.make_prefill_step(arch))
+        self._decode = jax.jit(ST.make_decode_step(arch), donate_argnums=(1,))
+        self.queue: list[Request] = []
+        self.completed: list[Request] = []
+        self.decode_steps = 0
+        self.waves = 0
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _sample(self, logits) -> np.ndarray:
+        logits = np.asarray(logits, np.float32)[:, : self.arch.vocab]
+        return np.argmax(logits, axis=-1).astype(np.int32)
+
+    def _run_wave(self, wave: list[Request]):
+        B = self.slots
+        lens = {len(r.prompt) for r in wave}
+        assert len(lens) == 1, \
+            "wave scheduling batches equal-length prompts (pad client-side)"
+        S = lens.pop()
+        toks = np.zeros((B, S), np.int32)
+        for i, r in enumerate(wave):
+            toks[i] = r.prompt
+        cache = jax.device_put(
+            T.init_cache(self.arch, B, self.max_len, self._cdtype),
+            self._cache_ns)
+        logits, cache = self._prefill(self.params, cache, jnp.asarray(toks))
+        nxt = self._sample(logits)
+        for i, r in enumerate(wave):
+            r.out_tokens.append(int(nxt[i]))
+        active = {i: r for i, r in enumerate(wave)
+                  if len(r.out_tokens) < r.max_new_tokens}
+        while active and S + len(wave[0].out_tokens) < self.max_len:
+            last = np.zeros((B, 1), np.int32)
+            for i, r in enumerate(wave):
+                last[i, 0] = r.out_tokens[-1]
+            logits, cache = self._decode(self.params, cache,
+                                         jnp.asarray(last))
+            nxt = self._sample(logits)
+            self.decode_steps += 1
+            for i in list(active):
+                r = active[i]
+                r.out_tokens.append(int(nxt[i]))
+                if len(r.out_tokens) >= r.max_new_tokens:
+                    r.done = True
+                    del active[i]
+        for r in wave:
+            r.done = True
+            self.completed.append(r)
+        self.waves += 1
+
+    def run_until_drained(self) -> float:
+        t0 = time.perf_counter()
+        while self.queue:
+            wave, self.queue = self.queue[:self.slots], self.queue[self.slots:]
+            self._run_wave(wave)
+        return time.perf_counter() - t0

@@ -1,0 +1,117 @@
+"""Step factories: train_step (grad-accum microbatching, remat, clipping,
+optimizer), prefill_step, decode_step.  These are what the launcher jits with
+the ASA plan's in/out shardings and what the dry-run lowers."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as T
+from repro.optim import optimizers as O
+
+
+def make_loss_fn(arch: ArchConfig, *, impl="xla", remat="none",
+                 act_sharding=None, mtp_weight: float = 0.3):
+    def loss_fn(params, tokens, labels, frontend=None):
+        out = T.lm_apply(params, arch, tokens, frontend=frontend, impl=impl,
+                         remat=remat, act_sharding=act_sharding,
+                         return_hidden=arch.mtp)
+        loss = T.lm_loss(out.logits, labels, arch.vocab)
+        if arch.mtp:
+            # depth-1 MTP: hidden_t + emb(token_{t+1}) predicts token_{t+2}
+            # = labels shifted left by one (mask the wrapped tail position)
+            mtp_lg = T.mtp_logits(params, arch, out.hidden, tokens)
+            tgt = jnp.roll(labels, -1, axis=1)
+            mask = jnp.ones_like(tgt, jnp.float32).at[:, -1].set(0.0)
+            loss = loss + mtp_weight * T.lm_loss(mtp_lg, tgt, arch.vocab, mask)
+        return loss + out.aux, loss
+    return loss_fn
+
+
+def make_train_step(arch: ArchConfig, optimizer, *, microbatches: int = 1,
+                    impl: str = "xla", remat: str = "none",
+                    act_sharding=None, grad_shardings=None,
+                    clip_norm: float = 1.0, mtp_weight: float = 0.3):
+    """-> train_step(params, opt_state, batch) -> (params, opt_state, metrics)
+
+    batch = {"tokens": (B,S) i32, "labels": (B,S) i32[, "frontend": (B,T,D)]}.
+    Gradients are accumulated over `microbatches` slices of the batch via
+    lax.scan (only one microbatch's activations live at a time).
+    grad_shardings (pytree of NamedSharding, like params) pins per-microbatch
+    gradients and the accumulator to the parameter layout — without it GSPMD
+    replicates the scan carry and all-reduces full fp32 gradients every
+    microbatch (observed: +66 GB/device on qwen3-8b, EXPERIMENTS.md §Perf).
+    """
+    _, opt_update = optimizer
+    loss_fn = make_loss_fn(arch, impl=impl, remat=remat,
+                           act_sharding=act_sharding, mtp_weight=mtp_weight)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def _pin(grads):
+        if grad_shardings is None:
+            return grads
+        return jax.tree.map(jax.lax.with_sharding_constraint, grads,
+                            grad_shardings)
+
+    def one_microbatch(params, mb):
+        (total, ce), grads = grad_fn(params, mb["tokens"], mb["labels"],
+                                     mb.get("frontend"))
+        return _pin(grads), total, ce
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            grads, total, ce = one_microbatch(params, batch)
+        else:
+            def split(x):
+                return x.reshape((microbatches, x.shape[0] // microbatches)
+                                 + x.shape[1:])
+            mbs = {k: split(v) for k, v in batch.items()}
+
+            def body(acc, mb):
+                g_acc, t_acc, c_acc = acc
+                g, t, c = one_microbatch(params, mb)
+                g_acc = _pin(jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32) / microbatches,
+                    g_acc, g))
+                return (g_acc, t_acc + t / microbatches,
+                        c_acc + c / microbatches), 0.0
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params)
+            (grads, total, ce), _ = jax.lax.scan(
+                body, (zeros, jnp.zeros((), jnp.float32),
+                       jnp.zeros((), jnp.float32)), mbs)
+
+        grads, gnorm = O.clip_by_global_norm(grads, clip_norm)
+        updates, opt_state = opt_update(grads, opt_state, params)
+        params = O.apply_updates(params, updates)
+        metrics = {"loss": total, "ce": ce, "grad_norm": gnorm,
+                   "step": opt_state.step}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(arch: ArchConfig, *, impl: str = "xla",
+                      act_sharding=None):
+    """-> prefill(params, cache, tokens[, frontend]) -> (last_logits, cache)."""
+    def prefill_step(params, cache, tokens, frontend=None):
+        out = T.lm_apply(params, arch, tokens, cache=cache,
+                         frontend=frontend, impl=impl,
+                         act_sharding=act_sharding)
+        return out.logits[:, -1], out.cache
+    return prefill_step
+
+
+def make_decode_step(arch: ArchConfig, *, impl: str = "xla",
+                     act_sharding=None):
+    """-> decode(params, cache, tokens (B,1)) -> (logits (B,V), cache)."""
+    def decode_step(params, cache, tokens):
+        out = T.lm_apply(params, arch, tokens, cache=cache, impl=impl,
+                         act_sharding=act_sharding)
+        return out.logits[:, -1], out.cache
+    return decode_step

@@ -1,0 +1,87 @@
+"""Cost-model properties: the physics the solver relies on."""
+import hypothesis
+import hypothesis.strategies as st
+import pytest
+
+from repro.core.components import Component
+from repro.core.costmodel import CostModel, MeshShape
+from repro.core.hardware import (TPU_V5E, allgather_time, alltoall_time,
+                                 reducescatter_time, ring_allreduce_time)
+from repro.core.strategy import Strategy
+
+
+def _comp(params=1e9, flops=1e13, act=1e8, count=4, a2a=0.0):
+    return Component("c", "attn", count, params=params, shared_params=False,
+                     flops_fwd=flops, act_bytes=act, n_model_allreduce=2,
+                     moe_a2a_bytes=a2a, kv_bytes=act)
+
+
+def _cm(**kw):
+    base = dict(hw=TPU_V5E, mesh=MeshShape(16, 16), mode="train",
+                faithful=False)
+    base.update(kw)
+    return CostModel(**base)
+
+
+def test_collective_time_formulas():
+    assert ring_allreduce_time(1e9, 1, 50e9) == 0.0
+    assert abs(ring_allreduce_time(1e9, 16, 50e9)
+               - 2 * 15 / 16 * 1e9 / 50e9) < 1e-12
+    assert allgather_time(1e9, 16, 50e9) < ring_allreduce_time(1e9, 16, 50e9)
+    assert reducescatter_time(1e9, 16, 50e9) == allgather_time(1e9, 16, 50e9)
+    assert alltoall_time(0, 16, 50e9) == 0.0
+
+
+@hypothesis.settings(max_examples=25, deadline=None)
+@hypothesis.given(st.floats(1e6, 1e11), st.floats(1e10, 1e16))
+def test_more_microbatches_never_increase_act_memory(params, flops):
+    c = _comp(params=params, flops=flops)
+    m1 = _cm(microbatches=1).component_cost(c, Strategy.HP)
+    m8 = _cm(microbatches=8).component_cost(c, Strategy.HP)
+    assert m8.mem_act <= m1.mem_act + 1e-9
+    # ...but they do increase ZeRO gather traffic
+    assert m8.t_comm >= m1.t_comm - 1e-12
+
+
+def test_seq_sharding_halves_mp_act_comm():
+    c = _comp()
+    base = _cm(seq_sharded=False).component_cost(c, Strategy.MP)
+    sp = _cm(seq_sharded=True).component_cost(c, Strategy.MP)
+    assert sp.t_comm < base.t_comm
+    assert sp.mem_act <= base.mem_act
+
+
+def test_fs_shards_params_over_all_chips():
+    c = _comp(params=1e10)
+    cm = _cm()
+    fs = cm.component_cost(c, Strategy.FS)
+    hp = cm.component_cost(c, Strategy.HP)
+    # single-pod: FS and HP both shard 256-way
+    assert abs(fs.mem_params - hp.mem_params) / hp.mem_params < 1e-6
+    cm2 = _cm(mesh=MeshShape(16, 16, pod=2))
+    fs2 = cm2.component_cost(c, Strategy.FS)
+    assert fs2.mem_params < fs.mem_params  # 512-way now
+
+
+def test_moe_ep_removes_gather_traffic():
+    c = _comp(params=5e10, a2a=1e9)
+    base = _cm(moe_ep=False).component_cost(c, Strategy.HP)
+    ep = _cm(moe_ep=True).component_cost(c, Strategy.HP)
+    assert ep.t_comm < base.t_comm
+    assert ep.mem_params <= base.mem_params + 1e-9
+
+
+def test_decode_mode_has_no_grad_traffic():
+    c = _comp()
+    dec = _cm(mode="decode").component_cost(c, Strategy.MP)
+    tr = _cm(mode="train").component_cost(c, Strategy.MP)
+    assert dec.t_comm < tr.t_comm
+    assert dec.t_comp < tr.t_comp
+
+
+def test_faithful_mode_is_pure_paper_model():
+    """faithful: no bandwidth floor, no pod grad term, no transitions."""
+    c = _comp(params=1e10, flops=1e10)   # tiny flops => bw floor would bind
+    f = _cm(faithful=True).component_cost(c, Strategy.MP)
+    o = _cm(faithful=False).component_cost(c, Strategy.MP)
+    assert o.t_comp >= f.t_comp          # bw floor only in optimized mode

@@ -1,0 +1,78 @@
+"""Dry-run tooling: trip-count-aware HLO collective parser + roofline
+analytics (no device work — pure parsing/math)."""
+import pytest
+
+SYNTH_HLO = """\
+HloModule synth
+
+%body.1 (arg: (s32[], f32[16,128])) -> (s32[], f32[16,128]) {
+  %p = (s32[], f32[16,128]) parameter(0)
+  %ar = f32[16,128]{1,0} all-reduce(%x), replica_groups={}
+  ROOT %t = (s32[], f32[16,128]) tuple(%i, %ar)
+}
+
+%cond.1 (arg: (s32[], f32[16,128])) -> pred[] {
+  %p2 = (s32[], f32[16,128]) parameter(0)
+  %k = s32[] constant(36)
+  ROOT %cmp = pred[] compare(%i2, %k), direction=LT
+}
+
+ENTRY %main (a: f32[16,128]) -> f32[16,128] {
+  %a = f32[16,128] parameter(0)
+  %ag = f32[256,128]{1,0} all-gather(%a), dimensions={0}
+  %w = (s32[], f32[16,128]) while(%init), condition=%cond.1, body=%body.1
+  ROOT %out = f32[16,128] get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_parse_collectives_scales_by_trip_count():
+    from repro.launch.dryrun import parse_collectives
+    out = parse_collectives(SYNTH_HLO)
+    # all-reduce inside the 36-trip while: 16*128*4 bytes * 36
+    assert out["all-reduce"]["bytes"] == 16 * 128 * 4 * 36
+    assert out["all-reduce"]["count"] == 36
+    # top-level all-gather counted once
+    assert out["all-gather"]["bytes"] == 256 * 128 * 4
+    assert out["all-gather"]["count"] == 1
+    assert out["total_bytes"] == out["all-reduce"]["bytes"] + \
+        out["all-gather"]["bytes"]
+
+
+def test_bytes_of_shape_str_tuples_and_dtypes():
+    from repro.launch.dryrun import _bytes_of_shape_str
+    assert _bytes_of_shape_str("f32[2,3]") == 24
+    assert _bytes_of_shape_str("(s32[], bf16[4,4])") == 4 + 32
+    assert _bytes_of_shape_str("pred[8]") == 8
+
+
+def test_model_flops_train_vs_decode():
+    from repro.launch.dryrun import model_flops
+    train = model_flops("qwen3-8b", "train_4k")
+    dec = model_flops("qwen3-8b", "decode_32k")
+    # 6*N*D for ~8.2B params x 1.05M tokens ~ 5e16
+    assert 1e16 < train < 1e17
+    assert dec < train / 1000
+
+
+def test_roofline_analytics_sane():
+    from benchmarks.roofline import hbm_bytes_analytic, hlo_flops_analytic
+    f_xla = hlo_flops_analytic("qwen3-8b", "train_4k")
+    f_pallas = hlo_flops_analytic("qwen3-8b", "train_4k",
+                                  pallas_attention=True)
+    assert f_pallas < f_xla          # kernel removes the 2x causal waste
+    assert hbm_bytes_analytic("qwen3-8b", "train_4k") > 0
+    tr = hlo_flops_analytic("qwen3-8b", "train_4k")
+    pf = hlo_flops_analytic("qwen3-8b", "prefill_32k")
+    assert tr > 0 and pf > 0
+
+
+def test_shape_applicability_rules():
+    from repro.configs import ARCHS, SHAPES, shape_applicable
+    ok, _ = shape_applicable(ARCHS["mamba2-780m"], SHAPES["long_500k"])
+    assert ok
+    ok, why = shape_applicable(ARCHS["qwen3-8b"], SHAPES["long_500k"])
+    assert not ok and "sub-quadratic" in why
+    for s in ("train_4k", "prefill_32k", "decode_32k"):
+        for a in ARCHS.values():
+            assert shape_applicable(a, SHAPES[s])[0]

@@ -1,0 +1,83 @@
+"""Fault-tolerance integration: crash/restart determinism, elastic
+re-planning, straggler-driven input reassignment under a live loop."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, Segment, ShapeSpec
+from repro.data import HostShardedLoader, SyntheticLM
+from repro.launch.mesh import make_host_mesh
+from repro.runtime.trainer import TrainConfig, Trainer
+
+TINY = ArchConfig(name="tiny-ft", family="dense", n_layers=2, d_model=64,
+                  n_heads=4, n_kv_heads=2, d_ff=128, vocab=256,
+                  pattern=(Segment(("attn",), 2),), dtype="float32",
+                  param_dtype="float32")
+SHAPE = ShapeSpec("ft", 32, 8, "train")
+
+
+def test_crash_restart_reaches_same_state(tmp_path):
+    """Train 12 steps with a checkpoint at 6; 'crash'; restart and replay
+    6..12; final loss must match the uninterrupted run exactly (determinism
+    of data offsets + exact state restore)."""
+    mesh = make_host_mesh()
+    cfg = TrainConfig(lr=1e-3, checkpoint_every=6, total_steps=24)
+
+    # uninterrupted reference
+    tr = Trainer(TINY, SHAPE, mesh, cfg, checkpoint_dir=str(tmp_path / "a"))
+    p, o = tr.init_state()
+    data = SyntheticLM(TINY.vocab, 32, 8)
+    p, o, hist_ref = tr.train(p, o, data, steps=12)
+    tr.ckpt.wait()
+
+    # crashy run: 7 steps (checkpoint landed at 6), then abandon
+    tr1 = Trainer(TINY, SHAPE, mesh, cfg, checkpoint_dir=str(tmp_path / "b"))
+    p1, o1 = tr1.init_state()
+    p1, o1, _ = tr1.train(p1, o1, SyntheticLM(TINY.vocab, 32, 8), steps=7)
+    tr1.ckpt.wait()
+
+    # restart from the step-6 checkpoint and replay to 12
+    tr2 = Trainer(TINY, SHAPE, mesh, cfg, checkpoint_dir=str(tmp_path / "b"))
+    p2, o2 = tr2.init_state()
+    p2, o2 = tr2.maybe_restore(p2, o2)
+    assert tr2.step == 6
+    data2 = SyntheticLM(TINY.vocab, 32, 8).skip(tr2.data_offset)
+    p2, o2, hist2 = tr2.train(p2, o2, data2, steps=6)
+
+    a = np.concatenate([np.ravel(x) for x in jax.tree.leaves(p)])
+    b = np.concatenate([np.ravel(x) for x in jax.tree.leaves(p2)])
+    np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6)
+    assert abs(hist_ref[-1]["loss"] - hist2[-1]["loss"]) < 1e-6
+
+
+def test_elastic_resize_preserves_state():
+    """Trainer.resize re-plans on a new mesh and reshards live state; the
+    model function is unchanged so the next loss continues the trajectory."""
+    mesh = make_host_mesh()
+    tr = Trainer(TINY, SHAPE, mesh, TrainConfig(lr=1e-3, total_steps=40))
+    p, o = tr.init_state()
+    data = SyntheticLM(TINY.vocab, 32, 8)
+    p, o, h1 = tr.train(p, o, data, steps=5)
+    p, o = tr.resize(make_host_mesh(), p, o)   # same size, full reshard path
+    p, o, h2 = tr.train(p, o, data, steps=5)
+    assert np.isfinite([m["loss"] for m in h2]).all()
+    assert h2[-1]["loss"] < h1[0]["loss"]
+
+
+def test_straggler_reassignment_preserves_coverage():
+    """After a host dies, the union of assigned shards across live hosts
+    still covers every shard exactly once."""
+    loaders = [HostShardedLoader(
+        lambda shard, n: SyntheticLM(100, 8, 2, seed=shard),
+        n_hosts=4, host_id=h, heartbeat_timeout_s=0.05) for h in range(4)]
+    now = time.monotonic()
+    for ld in loaders:
+        for h in range(4):
+            ld.heartbeat(h, now if h != 3 else now - 10)   # host 3 dies
+    assignments = []
+    for h in range(3):
+        next(loaders[h])
+        assignments += loaders[h].assigned
+    assert sorted(assignments) == [0, 1, 2, 3]

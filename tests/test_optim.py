@@ -1,0 +1,88 @@
+"""Optimizer substrate: AdamW/SGD correctness, int8 state quantization,
+schedules, clipping, error-feedback compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import hypothesis
+import hypothesis.strategies as st
+
+from repro.optim import optimizers as O
+from repro.optim.compression import (compress, decompress_and_update_error,
+                                     init_error_state)
+from repro.optim.quantized import QLeaf
+from repro.optim.schedules import cosine_schedule, linear_warmup
+
+
+def test_adamw_minimizes_quadratic():
+    init, update = O.adamw(0.1, weight_decay=0.0)
+    params = {"w": jnp.array([5.0, -3.0])}
+    state = init(params)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        upd, state = update(grads, state, params)
+        params = O.apply_updates(params, upd)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 1e-2
+
+
+def test_quantized_adamw_tracks_fp32():
+    def run(quantized):
+        init, update = O.adamw(0.05, weight_decay=0.0, quantized=quantized)
+        params = {"w": jnp.linspace(-2, 2, 512)}
+        state = init(params)
+        for _ in range(50):
+            grads = {"w": 2 * params["w"]}
+            upd, state = update(grads, state, params)
+            params = O.apply_updates(params, upd)
+        return params["w"]
+    w_fp, w_q = run(False), run(True)
+    assert float(jnp.mean(jnp.abs(w_fp - w_q))) < 0.05
+
+
+@hypothesis.settings(max_examples=20, deadline=None)
+@hypothesis.given(st.integers(1, 4000), st.booleans())
+def test_qleaf_roundtrip_error_bounded(n, signed):
+    x = jax.random.normal(jax.random.PRNGKey(n), (n,))
+    if not signed:
+        x = jnp.abs(x)     # unsigned stores the non-negative second moment
+    q = QLeaf.from_dense(x, signed)
+    err = jnp.max(jnp.abs(q.dense() - x))
+    scale = jnp.max(jnp.abs(x)) + 1e-12
+    assert float(err / scale) < (1 / 127 if signed else 2 / 255) + 1e-6
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.ones((10,)) * 3.0}
+    clipped, norm = O.clip_by_global_norm(g, 1.0)
+    assert abs(float(O.global_norm(clipped)) - 1.0) < 1e-5
+    assert abs(float(norm) - np.sqrt(90)) < 1e-4
+    small = {"a": jnp.ones((4,)) * 0.01}
+    same, _ = O.clip_by_global_norm(small, 1.0)
+    np.testing.assert_allclose(np.asarray(same["a"]), 0.01, rtol=1e-6)
+
+
+def test_schedules():
+    cs = cosine_schedule(1e-3, 10, 100)
+    assert float(cs(jnp.array(0))) == 0.0
+    assert abs(float(cs(jnp.array(10))) - 1e-3) < 1e-9
+    assert float(cs(jnp.array(100))) < float(cs(jnp.array(50)))
+    lw = linear_warmup(1e-3, 10)
+    assert abs(float(lw(jnp.array(5))) - 5e-4) < 1e-9
+
+
+def test_error_feedback_compression_converges():
+    """EF compression: accumulated compressed sum tracks the exact sum."""
+    key = jax.random.PRNGKey(0)
+    grads_seq = [{"w": jax.random.normal(jax.random.fold_in(key, i), (256,))}
+                 for i in range(30)]
+    err = init_error_state(grads_seq[0])
+    exact = jnp.zeros((256,))
+    approx = jnp.zeros((256,))
+    for g in grads_seq:
+        q, corrected = compress(g, err)
+        deq, err = decompress_and_update_error(q, corrected)
+        exact = exact + g["w"]
+        approx = approx + deq["w"]
+    # error feedback keeps the drift bounded by one quantization step
+    drift = float(jnp.max(jnp.abs(exact - approx)))
+    scale = float(jnp.max(jnp.abs(exact)))
+    assert drift < 0.1 * scale + 0.1

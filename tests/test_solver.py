@@ -1,0 +1,96 @@
+"""ASA solver property tests (hypothesis) — the paper's core invariants."""
+import hypothesis
+import hypothesis.strategies as st
+import pytest
+
+from repro.core.components import Component
+from repro.core.costmodel import CostModel, MeshShape
+from repro.core.hardware import TPU_V5E
+from repro.core.solver import (solve, solve_exhaustive, solve_greedy,
+                               solve_uniform)
+from repro.core.strategy import ALL_STRATEGIES, Strategy
+
+
+@st.composite
+def component_lists(draw, max_comps=6):
+    n = draw(st.integers(2, max_comps))
+    comps = []
+    for i in range(n):
+        params = draw(st.floats(1e6, 5e10))
+        flops = draw(st.floats(1e9, 1e15))
+        act = draw(st.floats(1e5, 1e9))
+        comps.append(Component(
+            name=f"c{i}", kind="attn", count=draw(st.integers(1, 8)),
+            params=params, shared_params=False, flops_fwd=flops,
+            act_bytes=act, n_model_allreduce=draw(st.integers(1, 3)),
+            moe_a2a_bytes=0.0, kv_bytes=act))
+    return comps
+
+
+def _cm(mode="train", faithful=True):
+    return CostModel(hw=TPU_V5E, mesh=MeshShape(16, 16), mode=mode,
+                     faithful=faithful)
+
+
+@hypothesis.settings(max_examples=30, deadline=None)
+@hypothesis.given(component_lists())
+def test_adaptive_never_loses_to_static(comps):
+    """cost(ASA) <= cost(best feasible uniform) — the paper's headline."""
+    cm = _cm()
+    plan = solve(cm, comps)
+    for s in ALL_STRATEGIES:
+        u = solve_uniform(cm, comps, s)
+        if u.cost["mem_per_device"] <= cm.hw.hbm_bytes and plan.feasible:
+            assert plan.cost["time"] <= u.cost["time"] * (1 + 1e-9)
+
+
+@hypothesis.settings(max_examples=30, deadline=None)
+@hypothesis.given(component_lists())
+def test_solver_respects_memory_when_possible(comps):
+    cm = _cm()
+    limit = cm.hw.hbm_bytes
+    any_feasible = any(
+        cm.assignment_cost(comps, {c.name: s for c in comps})["mem_per_device"]
+        <= limit for s in ALL_STRATEGIES)
+    plan = solve(cm, comps, mem_limit=limit)
+    if any_feasible:
+        assert plan.feasible
+        assert plan.cost["mem_per_device"] <= limit * (1 + 1e-9)
+
+
+@hypothesis.settings(max_examples=20, deadline=None)
+@hypothesis.given(component_lists(max_comps=5))
+def test_greedy_matches_exhaustive_when_unconstrained(comps):
+    """With no memory pressure, greedy == exhaustive == per-comp argmin."""
+    cm = _cm()
+    g = solve_greedy(cm, comps, mem_limit=float("inf"))
+    e = solve_exhaustive(cm, comps, mem_limit=float("inf"))
+    assert abs(g.cost["time"] - e.cost["time"]) <= 1e-9 * e.cost["time"] + 1e-12
+
+
+@hypothesis.settings(max_examples=20, deadline=None)
+@hypothesis.given(component_lists(max_comps=4))
+def test_greedy_within_bound_of_exhaustive(comps):
+    cm = _cm()
+    g = solve_greedy(cm, comps)
+    e = solve_exhaustive(cm, comps)
+    if g.feasible and e.feasible:
+        assert g.cost["time"] <= 2.0 * e.cost["time"] + 1e-12
+
+
+def test_memory_ordering():
+    """Per-component memory: DP >= MP >= HP (the repair direction)."""
+    c = Component("c", "attn", 4, params=1e9, shared_params=False,
+                  flops_fwd=1e12, act_bytes=1e8, n_model_allreduce=2)
+    cm = _cm()
+    mems = {s: (cm.component_cost(c, s).mem_params
+                + cm.component_cost(c, s).mem_act) for s in ALL_STRATEGIES}
+    assert mems[Strategy.DP] >= mems[Strategy.MP] >= mems[Strategy.HP]
+
+
+def test_faithful_mode_has_no_transition_costs():
+    cm = _cm(faithful=True)
+    assert cm.transition_cost(Strategy.DP, Strategy.MP, 1e9) == 0.0
+    cm2 = _cm(faithful=False)
+    assert cm2.transition_cost(Strategy.DP, Strategy.MP, 1e9) > 0.0
+    assert cm2.transition_cost(Strategy.MP, Strategy.MP, 1e9) == 0.0
