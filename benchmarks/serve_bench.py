@@ -1,0 +1,192 @@
+"""Serving benchmark: wave vs continuous engines on one synthetic trace.
+
+Trace: mixed prompt lengths, Poisson arrivals.  Both engines see the same
+requests in the same arrival order; results (throughput, TTFT, TPOT,
+latency, occupancy, preemptions) land in BENCH_serving.json.
+
+The wave baseline requires equal-length prompts per wave, so the harness
+pads each wave group to its max prompt length client-side — that padding
+(and the stall until a whole wave drains) is precisely the cost the
+continuous engine removes.
+
+  PYTHONPATH=src python benchmarks/serve_bench.py            # smoke-size
+  PYTHONPATH=src python benchmarks/serve_bench.py --requests 32 --rate 4
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+import time
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+import numpy as np
+
+from repro.configs import ARCHS, reduce_for_smoke
+from repro.launch.mesh import make_host_mesh
+from repro.models import transformer as T
+from repro.runtime.server import Request as WaveRequest, Server
+from repro.serving import ContinuousBatchingEngine, Request
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def make_trace(n: int, rate_hz: float, vocab: int, seed: int = 0):
+    """[(arrival_s, prompt, max_new)] — Poisson arrivals, mixed lengths."""
+    rng = np.random.default_rng(seed)
+    t, trace = 0.0, []
+    for _ in range(n):
+        t += rng.exponential(1.0 / rate_hz)
+        plen = int(rng.choice([8, 16, 24, 48]))
+        prompt = rng.integers(1, vocab, size=plen).astype(np.int32)
+        trace.append((t, prompt, 16))
+    return trace
+
+
+class TimedServer(Server):
+    """Wave server + first-token / finish timestamps for TTFT/TPOT."""
+
+    def __init__(self, *a, **kw):
+        super().__init__(*a, **kw)
+        self.first_token_t: dict[int, float] = {}
+        self.finish_t: dict[int, float] = {}
+
+    def _run_wave(self, wave):
+        orig = self._prefill
+
+        def timed_prefill(*args):
+            out = orig(*args)
+            jax.block_until_ready(out[0])
+            now = time.perf_counter()
+            for r in wave:
+                self.first_token_t[r.id] = now
+            return out
+
+        self._prefill = timed_prefill
+        try:
+            super()._run_wave(wave)
+        finally:
+            self._prefill = orig
+        now = time.perf_counter()
+        for r in wave:
+            self.finish_t[r.id] = now
+
+
+def _pad_group(group):
+    """Left-pad a wave group's prompts to a common length (token 1)."""
+    s = max(len(r.prompt) for r in group)
+    for r in group:
+        if len(r.prompt) < s:
+            r.prompt = np.concatenate(
+                [np.ones(s - len(r.prompt), np.int32), r.prompt])
+
+
+def bench_wave(arch, params, mesh, trace, *, slots, max_len):
+    srv = TimedServer(arch, params, mesh, slots=slots, max_len=max_len)
+    pending = list(enumerate(trace))
+    arrival = {i: a for i, (a, _, _) in enumerate(trace)}
+    t0 = time.perf_counter()
+    queue: list[WaveRequest] = []
+    while pending or queue:
+        now = time.perf_counter() - t0
+        while pending and pending[0][1][0] <= now:
+            i, (_, prompt, max_new) = pending.pop(0)
+            queue.append(WaveRequest(id=i, prompt=prompt.copy(),
+                                     max_new_tokens=max_new))
+        if not queue:
+            time.sleep(min(pending[0][1][0] - now, 0.01))
+            continue
+        group, queue = queue[:slots], queue[slots:]
+        _pad_group(group)
+        srv._run_wave(group)
+    wall = time.perf_counter() - t0
+    reqs = []
+    for r in srv.completed:
+        ft = srv.first_token_t[r.id] - t0
+        fin = srv.finish_t[r.id] - t0
+        n = len(r.out_tokens)
+        reqs.append({"id": r.id, "n_tokens": n,
+                     "ttft_s": ft - arrival[r.id],
+                     "tpot_s": (fin - ft) / max(n - 1, 1),
+                     "latency_s": fin - arrival[r.id]})
+    total = sum(r["n_tokens"] for r in reqs)
+    return {"engine": "wave", "wall_s": wall, "total_tokens": total,
+            "tokens_per_sec": total / wall,
+            "ttft_mean_s": float(np.mean([r["ttft_s"] for r in reqs])),
+            "tpot_mean_s": float(np.mean([r["tpot_s"] for r in reqs])),
+            "latency_mean_s": float(np.mean([r["latency_s"] for r in reqs])),
+            "waves": srv.waves, "decode_steps": srv.decode_steps,
+            "requests": reqs}
+
+
+def bench_continuous(arch, params, mesh, trace, *, slots, max_len,
+                     block_size, prefill_chunk):
+    eng = ContinuousBatchingEngine(arch, params, mesh, slots=slots,
+                                   max_len=max_len, block_size=block_size,
+                                   prefill_chunk=prefill_chunk)
+    pending = list(enumerate(trace))
+    t0 = time.perf_counter()
+    while pending or eng.has_work:
+        now = time.perf_counter() - t0
+        while pending and pending[0][1][0] <= now:
+            i, (_, prompt, max_new) = pending.pop(0)
+            eng.submit(Request(id=i, prompt=prompt.copy(),
+                               max_new_tokens=max_new))
+        if eng.has_work:
+            eng.step()
+        elif pending:
+            time.sleep(min(pending[0][1][0] - now, 0.01))
+    wall = time.perf_counter() - t0
+    out = eng.metrics.summary()
+    out.update(engine="continuous", wall_s=wall,
+               tokens_per_sec=out["total_tokens"] / wall)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-8b")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--rate", type=float, default=8.0,
+                    help="Poisson arrival rate (req/s)")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--prefill-chunk", type=int, default=32)
+    ap.add_argument("--out", default=str(ROOT / "BENCH_serving.json"))
+    args = ap.parse_args()
+
+    arch = reduce_for_smoke(ARCHS[args.arch])
+    params = T.init_lm(jax.random.PRNGKey(0), arch)
+    mesh = make_host_mesh()
+    trace = make_trace(args.requests, args.rate, arch.vocab)
+
+    results = {"arch": arch.name, "trace": {
+        "requests": args.requests, "rate_hz": args.rate,
+        "prompt_lens": sorted({len(p) for _, p, _ in trace})}}
+    for name, fn, kw in [
+        ("wave", bench_wave, {}),
+        ("continuous", bench_continuous,
+         {"block_size": args.block_size,
+          "prefill_chunk": args.prefill_chunk}),
+    ]:
+        r = fn(arch, params, mesh, trace, slots=args.slots,
+               max_len=args.max_len, **kw)
+        results[name] = r
+        print(f"[{name}] {r['total_tokens']} tokens "
+              f"{r['tokens_per_sec']:.1f} tok/s "
+              f"ttft {r['ttft_mean_s']*1e3:.0f}ms "
+              f"tpot {r['tpot_mean_s']*1e3:.1f}ms")
+    results["speedup_tokens_per_sec"] = (
+        results["continuous"]["tokens_per_sec"]
+        / results["wave"]["tokens_per_sec"])
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"speedup {results['speedup_tokens_per_sec']:.2f}x -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Continuous-batching serving example: paged KV cache + request scheduler.
+
+Mixed prompt lengths and priorities flow through the admission scheduler;
+freed slots are refilled every engine step and long prompts prefill in
+chunks between decode steps (contrast with examples/serve_lm.py, the
+wave-synchronized baseline).
+
+    PYTHONPATH=src python examples/serve_continuous.py
+"""
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+import numpy as np
+import jax
+
+from repro.configs import ARCHS, reduce_for_smoke
+from repro.launch.mesh import make_host_mesh
+from repro.models import transformer as T
+from repro.serving import ContinuousBatchingEngine, Request, RequestScheduler
+
+
+def main():
+    arch = reduce_for_smoke(ARCHS["qwen3-8b"])
+    params = T.init_lm(jax.random.PRNGKey(0), arch)
+    mesh = make_host_mesh()
+    engine = ContinuousBatchingEngine(
+        arch, params, mesh, slots=4, max_len=128, block_size=16,
+        prefill_chunk=32,
+        scheduler=RequestScheduler(max_tokens_in_flight=512))
+    print(f"serving {arch.name}: "
+          f"{sum(x.size for x in jax.tree.leaves(params)):,} params, "
+          f"{len(engine.slots)} slots, "
+          f"{engine.cache.cfg.num_blocks} x {engine.cache.cfg.block_size}"
+          f"-token KV blocks")
+
+    rng = np.random.default_rng(0)
+    for i in range(10):
+        prompt_len = int(rng.integers(8, 48))
+        engine.submit(Request(
+            id=i,
+            prompt=rng.integers(1, arch.vocab, size=prompt_len)
+            .astype(np.int32),
+            max_new_tokens=12,
+            priority=0 if i % 3 == 0 else 1))   # every 3rd request urgent
+    wall = engine.run_until_drained()
+    s = engine.metrics.summary()
+    print(f"completed {s['completed']} requests, {s['total_tokens']} tokens "
+          f"in {wall:.2f}s ({s['decode_steps']} decode steps, "
+          f"{s['prefill_chunks']} prefill chunks, "
+          f"occupancy {s['slot_occupancy_mean']*100:.0f}%)")
+    for r in engine.completed[:3]:
+        print(f"  req {r.id}: {r.out_tokens}")
+
+
+if __name__ == "__main__":
+    main()

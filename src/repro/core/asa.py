@@ -45,6 +45,9 @@ class SchedulePlan:
     def cache_specs(self, batch: int):
         return SH.cache_specs(self.arch, self.assignment, self.mesh, batch)
 
+    def paged_cache_specs(self):
+        return SH.paged_cache_specs(self.arch, self.assignment, self.mesh)
+
     def summary(self) -> str:
         rows = [f"  {c.name:<36s} -> {self.assignment[c.name]}"
                 for c in self.comps]

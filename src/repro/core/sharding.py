@@ -343,3 +343,30 @@ def cache_specs(arch: ArchConfig, assignment: dict[str, Strategy],
                 seg_spec[f"b{bi}"] = None
         specs.append(seg_spec)
     return specs
+
+
+def paged_cache_specs(arch: ArchConfig, assignment: dict[str, Strategy],
+                      mesh: MeshShape):
+    """Spec tree mirroring init_paged_cache: per-segment stacked block pools.
+
+    Pool dims are (repeat, num_blocks, block_size, Hkv, head_dim).  The pool
+    has no batch axis and its block axis is gathered through block tables
+    every step, so unlike cache_specs the time axis cannot carry the MP
+    shard; instead the kv-head axis shards over `model` (the classic paged-KV
+    layout) whenever the head count divides, else the pool is replicated."""
+    specs = []
+    for si, seg in enumerate(arch.pattern):
+        seg_spec = {}
+        for bi, kind in enumerate(seg.blocks):
+            if kind not in ("attn", "moe_attn"):
+                raise ValueError(
+                    f"paged KV cache unsupported for block kind {kind!r}")
+            comp = f"seg{si}/b{bi}:{kind}.mixer" if kind in SPLIT_KEYS \
+                else f"seg{si}/b{bi}:{kind}"
+            strat = assignment.get(comp, Strategy.DP)
+            h_ax = "model" if (strat in (Strategy.MP, Strategy.HP)
+                               and _kv_heads_ok(arch, mesh)) else None
+            pool = P(None, None, None, h_ax, None)
+            seg_spec[f"b{bi}"] = {"k": pool, "v": pool}
+        specs.append(seg_spec)
+    return specs

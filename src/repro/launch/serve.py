@@ -1,7 +1,13 @@
-"""Serving launcher CLI (wave-batched greedy decoding).
+"""Serving launcher CLI.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --smoke \
-        --requests 8 --prompt-len 16 --max-new 12
+        --engine continuous --requests 8 --prompt-len 16 --max-new 12
+
+--engine wave        batched prefill + lock-step decode waves (baseline,
+                     runtime/server.py — only path for SSM/cross-attn caches)
+--engine continuous  paged-KV continuous batching with chunked prefill and
+                     per-slot positions (repro/serving/), emits a JSON
+                     metrics report (TTFT/TPOT/occupancy/tokens-per-sec).
 """
 from __future__ import annotations
 
@@ -13,18 +19,27 @@ import numpy as np
 from repro.configs import ARCHS, get_arch, reduce_for_smoke
 from repro.launch.mesh import make_host_mesh
 from repro.models import transformer as T
-from repro.runtime.server import Request, Server
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True, choices=sorted(ARCHS))
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--engine", choices=("wave", "continuous"),
+                    default="wave")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="paged-KV block size (continuous engine)")
+    ap.add_argument("--prefill-chunk", type=int, default=64,
+                    help="prompt tokens prefilled per engine step")
+    ap.add_argument("--num-blocks", type=int, default=None,
+                    help="physical KV blocks (default: slots*max_len worth)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the continuous engine's JSON metrics here")
     args = ap.parse_args()
 
     arch = get_arch(args.arch)
@@ -32,20 +47,45 @@ def main():
         arch = reduce_for_smoke(arch)
     params = T.init_lm(jax.random.PRNGKey(0), arch)
     mesh = make_host_mesh()
-    server = Server(arch, params, mesh, slots=args.slots,
-                    max_len=args.max_len)
     rng = np.random.default_rng(0)
-    for i in range(args.requests):
-        server.submit(Request(
-            id=i,
-            prompt=rng.integers(1, arch.vocab,
-                                size=args.prompt_len).astype(np.int32),
-            max_new_tokens=args.max_new))
-    wall = server.run_until_drained()
-    total = sum(len(r.out_tokens) for r in server.completed)
-    print(f"{len(server.completed)} requests, {total} tokens, "
-          f"{wall:.2f}s wall ({total / max(wall, 1e-9):.1f} tok/s host-wall), "
-          f"{server.waves} waves / {server.decode_steps} decode steps")
+    prompts = [rng.integers(1, arch.vocab, size=args.prompt_len)
+               .astype(np.int32) for _ in range(args.requests)]
+
+    if args.engine == "wave":
+        from repro.runtime.server import Request, Server
+        server = Server(arch, params, mesh, slots=args.slots,
+                        max_len=args.max_len)
+        for i, p in enumerate(prompts):
+            server.submit(Request(id=i, prompt=p,
+                                  max_new_tokens=args.max_new))
+        wall = server.run_until_drained()
+        total = sum(len(r.out_tokens) for r in server.completed)
+        print(f"[wave] {len(server.completed)} requests, {total} tokens, "
+              f"{wall:.2f}s wall ({total / max(wall, 1e-9):.1f} tok/s "
+              f"host-wall), {server.waves} waves / "
+              f"{server.decode_steps} decode steps")
+        return
+
+    from repro.serving import ContinuousBatchingEngine, Request
+    engine = ContinuousBatchingEngine(
+        arch, params, mesh, slots=args.slots, max_len=args.max_len,
+        block_size=args.block_size, num_blocks=args.num_blocks,
+        prefill_chunk=args.prefill_chunk)
+    for i, p in enumerate(prompts):
+        engine.submit(Request(id=i, prompt=p, max_new_tokens=args.max_new))
+    wall = engine.run_until_drained()
+    s = engine.metrics.summary()
+    print(f"[continuous] {s['completed']} requests, {s['total_tokens']} "
+          f"tokens, {wall:.2f}s wall "
+          f"({s['total_tokens'] / max(wall, 1e-9):.1f} tok/s host-wall), "
+          f"{s['decode_steps']} decode steps / {s['prefill_chunks']} prefill "
+          f"chunks, ttft mean {s['ttft_mean_s']*1e3:.1f}ms, occupancy "
+          f"{s['slot_occupancy_mean']*100:.0f}%, "
+          f"{s['preemptions']} preemptions")
+    if args.metrics_out:
+        engine.metrics.write(args.metrics_out, engine="continuous",
+                             arch=arch.name)
+        print(f"metrics -> {args.metrics_out}")
 
 
 if __name__ == "__main__":

@@ -170,6 +170,17 @@ def init_block_cache(kind: str, arch: ArchConfig, batch: int, max_len: int,
     raise ValueError(kind)
 
 
+def init_paged_block_cache(kind: str, arch: ArchConfig, num_blocks: int,
+                           block_size: int, dtype=jnp.bfloat16) -> Params:
+    """Physical KV block pool for one block (attn-family kinds only — SSM /
+    cross-attention states are not length-indexed, so paging does not apply;
+    the wave Server in runtime/server.py remains the path for those)."""
+    if kind in ("attn", "moe_attn"):
+        return L.init_paged_attention_cache(attn_cfg_for(arch), num_blocks,
+                                            block_size, dtype)
+    raise ValueError(f"paged KV cache unsupported for block kind {kind!r}")
+
+
 # ---------------------------------------------------------------------------
 # apply
 # ---------------------------------------------------------------------------
@@ -180,14 +191,21 @@ def apply_block(p: Params, kind: str, arch: ArchConfig, x: Array, *,
                 shared: Optional[Params] = None,
                 cache: Optional[Params] = None,
                 positions: Optional[Array] = None,
+                block_tables: Optional[Array] = None,
+                new_lens: Optional[Array] = None,
                 impl: str = "xla"):
-    """-> (x, new_cache, aux_loss)."""
+    """-> (x, new_cache, aux_loss).  ``block_tables`` selects the paged-KV
+    decode path (attn-family kinds only; see serving/paged_cache.py)."""
     aux = ZERO
+    if block_tables is not None and kind not in ("attn", "moe_attn"):
+        raise ValueError(f"paged KV cache unsupported for block kind {kind!r}")
     if kind in ("attn", "enc_attn", "moe_attn"):
         causal = kind != "enc_attn"
         cfg = attn_cfg_for(arch, causal=causal, use_rope=(kind != "enc_attn"))
         h, new_cache = L.attention(p["attn"], cfg, norm_apply(arch, p["norm1"], x),
-                                   cache=cache, positions=positions, impl=impl)
+                                   cache=cache, positions=positions,
+                                   block_tables=block_tables,
+                                   new_lens=new_lens, impl=impl)
         x = x + h
         if kind == "moe_attn":
             h, aux = MOE.moe(p["moe"], moe_cfg_for(arch),

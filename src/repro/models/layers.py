@@ -225,17 +225,100 @@ def _sdpa(q: Array, k: Array, v: Array, *, causal: bool, scale: float,
                        q_pos=q_pos, kv_len=kv_len)
 
 
+def _paged_sdpa(q: Array, k: Array, v: Array, *, scale: float,
+                q_pos: Array, kv_len: Array) -> Array:
+    """SDPA with *per-sequence* causal masks: q_pos (B,S), kv_len (B,).
+
+    Masked entries contribute exactly-zero probability (exp underflows), so
+    the result is bitwise identical to the contiguous-cache decode path on
+    the unmasked prefix — the greedy-parity test in tests/test_serving.py
+    relies on this."""
+    B, S, H, D = q.shape
+    T = k.shape[1]
+    logits = jnp.einsum("bshd,bthd->bhst", q, k).astype(jnp.float32) * scale
+    kp = jnp.arange(T)
+    mask = q_pos[:, :, None] >= kp[None, None, :]            # (B,S,T) causal
+    mask = mask & (kp[None, None, :] < kv_len[:, None, None])
+    logits = jnp.where(mask[:, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhst,bthd->bshd", probs, v)
+
+
+def paged_attention(p: Params, cfg: AttnConfig, x: Array, *,
+                    cache: Params, positions: Array,
+                    block_tables: Array,
+                    new_lens: Optional[Array] = None) -> tuple[Array, Params]:
+    """Self-attention over a block-paged KV pool (vLLM-style paged KV).
+
+    cache: {"k": (NB, BS, Hkv, D), "v": ...} — a *physical block pool* shared
+    by every request; ``block_tables`` (B, max_blocks) int32 maps each
+    sequence's logical block j to a physical block (block 0 is the reserved
+    null block — idle batch slots point every entry there).  ``positions``
+    (B,) int32 is each sequence's token count before this call; the S new
+    tokens are written at logical positions positions[b]..positions[b]+S-1
+    and attention runs over the gathered logical view with per-sequence
+    causal/length masks.  ``new_lens`` (B,) < S marks rows past it as
+    padding: their writes are diverted to the null block and their tokens
+    never enter kv_len, so callers can fix the chunk shape (one jit trace)
+    regardless of actual prompt-chunk length.  Serving layer:
+    repro/serving/paged_cache.py.
+    """
+    B, S, _ = x.shape
+    NB, BS, Hkv, D = cache["k"].shape
+    q = dense(p["wq"], x).reshape(B, S, cfg.n_heads, cfg.head_dim)
+    k = dense(p["wk"], x).reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    v = dense(p["wv"], x).reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q)
+        k = rmsnorm(p["k_norm"], k)
+    qp = positions[:, None] + jnp.arange(S)[None, :]         # (B, S)
+    if cfg.use_rope:
+        q = apply_rope(q, qp, cfg.rope_theta)
+        k = apply_rope(k, qp, cfg.rope_theta)
+    # scatter new k/v into their pages (flat row index = block * BS + offset)
+    blk = jnp.take_along_axis(block_tables,
+                              jnp.minimum(qp // BS, block_tables.shape[1] - 1),
+                              axis=1)
+    flat = blk * BS + qp % BS                                # (B, S)
+    if new_lens is not None:   # padded rows -> null-block scratch offsets
+        valid = jnp.arange(S)[None, :] < new_lens[:, None]
+        flat = jnp.where(valid, flat, jnp.arange(S)[None, :] % BS)
+    flat = flat.reshape(-1)                                  # (B*S,)
+    ck = cache["k"].reshape(NB * BS, Hkv, D).at[flat].set(
+        k.astype(cache["k"].dtype).reshape(B * S, Hkv, D)).reshape(NB, BS, Hkv, D)
+    cv = cache["v"].reshape(NB * BS, Hkv, D).at[flat].set(
+        v.astype(cache["v"].dtype).reshape(B * S, Hkv, D)).reshape(NB, BS, Hkv, D)
+    # gather each sequence's pages back into logical order
+    T = block_tables.shape[1] * BS
+    gk = ck[block_tables].reshape(B, T, Hkv, D).astype(q.dtype)
+    gv = cv[block_tables].reshape(B, T, Hkv, D).astype(q.dtype)
+    scale = cfg.softmax_scale or (1.0 / math.sqrt(cfg.head_dim))
+    kv_len = positions + (new_lens if new_lens is not None else S)
+    out = _paged_sdpa(q, _expand_kv(gk, cfg.n_heads), _expand_kv(gv, cfg.n_heads),
+                      scale=scale, q_pos=qp, kv_len=kv_len)
+    y = dense(p["wo"], out.reshape(B, S, cfg.q_dim))
+    return y, {"k": ck, "v": cv}
+
+
 def attention(p: Params, cfg: AttnConfig, x: Array, *,
               kv_input: Optional[Array] = None,
               cache: Optional[Params] = None,
               positions: Optional[Array] = None,
+              block_tables: Optional[Array] = None,
+              new_lens: Optional[Array] = None,
               impl: str = "xla") -> tuple[Array, Optional[Params]]:
     """Self- or cross-attention.
 
     cache (decode): {"k": (B,T,Hkv,D), "v": ..., "pos": scalar int32} — new
     k/v written at ``pos``; returns updated cache.  For cross-attention the
-    cache holds precomputed encoder K/V and is not updated.
+    cache holds precomputed encoder K/V and is not updated.  When
+    ``block_tables`` is given the cache is a paged block pool instead and
+    dispatches to :func:`paged_attention` (per-sequence positions).
     """
+    if block_tables is not None:
+        assert cache is not None and positions is not None
+        return paged_attention(p, cfg, x, cache=cache, positions=positions,
+                               block_tables=block_tables, new_lens=new_lens)
     B, S, _ = x.shape
     src = kv_input if kv_input is not None else x
     q = dense(p["wq"], x).reshape(B, S, cfg.n_heads, cfg.head_dim)
@@ -301,6 +384,14 @@ def init_attention_cache(cfg: AttnConfig, batch: int, max_len: int,
     shp = (batch, max_len, cfg.n_kv_heads, cfg.head_dim)
     return {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype),
             "pos": jnp.zeros((), jnp.int32)}
+
+
+def init_paged_attention_cache(cfg: AttnConfig, num_blocks: int,
+                               block_size: int, dtype=jnp.bfloat16) -> Params:
+    """Physical KV block pool shared by all requests (no batch axis; block 0
+    is the reserved null block).  See :func:`paged_attention`."""
+    shp = (num_blocks, block_size, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype)}
 
 
 # ---------------------------------------------------------------------------

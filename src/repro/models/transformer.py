@@ -115,6 +115,26 @@ def init_cache(arch: ArchConfig, batch: int, max_len: int,
     return caches
 
 
+def init_paged_cache(arch: ArchConfig, num_blocks: int, block_size: int,
+                     dtype=jnp.bfloat16) -> list:
+    """Per-segment stacked *paged* KV block pools (leading repeat axis).
+
+    Unlike init_cache there is no batch axis: the pool is shared by every
+    in-flight request and indexed through per-request block tables (see
+    layers.paged_attention / serving/paged_cache.py)."""
+    caches = []
+    for seg in arch.pattern:
+        def one(_):
+            return {f"b{i}": B.init_paged_block_cache(kind, arch, num_blocks,
+                                                      block_size, dtype)
+                    for i, kind in enumerate(seg.blocks)}
+        stacked = jax.tree.map(
+            lambda *xs: jnp.stack(xs), *[one(r) for r in range(seg.repeat)]) \
+            if seg.repeat > 1 else jax.tree.map(lambda x: x[None], one(0))
+        caches.append(stacked)
+    return caches
+
+
 # ---------------------------------------------------------------------------
 # apply
 # ---------------------------------------------------------------------------
@@ -136,7 +156,8 @@ def _constrain(x, act_sharding):
 
 
 def _apply_segment(seg_params, blocks, arch, x, *, seg_cache=None, x0=None,
-                   cross_input=None, shared=None, positions=None, impl="xla",
+                   cross_input=None, shared=None, positions=None,
+                   block_tables=None, new_lens=None, impl="xla",
                    unroll: int = 1, remat: str = "none", act_sharding=None):
     """Scan the segment body over its repeat axis.  ``remat`` applies
     per-layer activation checkpointing inside the scan (the standard
@@ -153,7 +174,8 @@ def _apply_segment(seg_params, blocks, arch, x, *, seg_cache=None, x0=None,
             c = c_stack[bi] if has_cache else None
             x, nc, a = B.apply_block(
                 p_stack[bi], kind, arch, x, x0=x0, cross_input=cross_input,
-                shared=shared, cache=c, positions=positions, impl=impl)
+                shared=shared, cache=c, positions=positions,
+                block_tables=block_tables, new_lens=new_lens, impl=impl)
             if has_cache:
                 new_caches[bi] = nc
             aux = aux + a
@@ -174,6 +196,8 @@ def lm_apply(params: Params, arch: ArchConfig, tokens: Optional[Array] = None, *
              cache: Optional[list] = None,
              frontend: Optional[Array] = None,
              positions: Optional[Array] = None,
+             block_tables: Optional[Array] = None,
+             new_lens: Optional[Array] = None,
              impl: str = "xla",
              remat: str = "none",
              act_sharding=None,
@@ -185,6 +209,10 @@ def lm_apply(params: Params, arch: ArchConfig, tokens: Optional[Array] = None, *
     frontend: precomputed modality embeddings —
        vlm:   (B, n_img_tokens, d_model) patch embeddings -> cross-attn input
        audio: (B, enc_len, d_model) frame embeddings -> encoder input
+    block_tables: (B, max_blocks) int32 — marks ``cache`` as paged block
+       pools (init_paged_cache); requires per-sequence ``positions`` (B,).
+       ``new_lens`` (B,) marks token rows past it as padding (fixed-shape
+       prompt chunks; see layers.paged_attention).
     """
     cdt = _compute_dtype(arch)
     aux_total = B.ZERO
@@ -223,7 +251,8 @@ def lm_apply(params: Params, arch: ArchConfig, tokens: Optional[Array] = None, *
         x, aux, nc = _apply_segment(
             params["segments"][si], seg.blocks, arch, x,
             seg_cache=seg_cache, x0=x0, cross_input=cross_input,
-            shared=params.get("shared"), positions=positions, impl=impl,
+            shared=params.get("shared"), positions=positions,
+            block_tables=block_tables, new_lens=new_lens, impl=impl,
             remat=remat, act_sharding=act_sharding)
         aux_total = aux_total + aux
         new_caches.append(nc)

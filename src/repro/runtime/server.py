@@ -3,8 +3,15 @@
 A wave = up to `slots` requests, prompts right-aligned/padded to a common
 length, one batched prefill, then lock-step decode until every request in
 the wave finished (early finishers are masked).  Wave scheduling keeps the
-shared per-layer cache position scalar correct; per-slot positions (true
-continuous batching) are future work and orthogonal to the ASA contribution.
+shared per-layer cache position scalar correct.
+
+True continuous batching (per-slot positions, paged KV cache, chunked
+prefill, admission scheduling) lives in ``repro/serving/`` —
+ContinuousBatchingEngine is greedy-parity-tested against this Server and is
+the production path for attention-only architectures.  This wave Server
+remains as the comparison baseline (benchmarks/serve_bench.py) and as the
+serving path for caches that are not length-indexed (SSM states,
+cross-attention K/V).
 
 The ASA plan supplies param/cache shardings (decode picks MP — KV cache
 time-sharded over `model`; see core/sharding.py).
@@ -81,7 +88,11 @@ class Server:
             r.out_tokens.append(int(nxt[i]))
         active = {i: r for i, r in enumerate(wave)
                   if len(r.out_tokens) < r.max_new_tokens}
-        while active and S + len(wave[0].out_tokens) < self.max_len:
+        # bound on the *active* requests: a finished slot stops growing, so
+        # wave[0]'s length alone would let longer requests decode past
+        # max_len and clamp-overwrite the last cache position
+        while active and S + max(len(r.out_tokens)
+                                 for r in active.values()) < self.max_len:
             last = np.zeros((B, 1), np.int32)
             for i, r in enumerate(wave):
                 last[i, 0] = r.out_tokens[-1]

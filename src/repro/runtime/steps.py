@@ -115,3 +115,41 @@ def make_decode_step(arch: ArchConfig, *, impl: str = "xla",
                          act_sharding=act_sharding)
         return out.logits[:, -1], out.cache
     return decode_step
+
+
+# --- paged steps (continuous-batching engine, repro/serving/) --------------
+# Both take the shared block-pool cache plus per-sequence position vectors
+# (B,) and block tables (B, max_blocks); see layers.paged_attention.
+
+def make_paged_prefill_step(arch: ArchConfig, *, impl: str = "xla",
+                            act_sharding=None):
+    """-> prefill(params, cache, tokens (B,C), positions, block_tables,
+    new_lens) -> (last_valid_logits (B,V), cache).  Called once per prompt
+    *chunk* — the engine interleaves these with decode steps instead of
+    stalling a wave.  ``new_lens`` (B,) is the real token count per row; the
+    chunk is padded to a fixed C so the step traces once, and the returned
+    logits are taken at row new_lens-1 (the last real token)."""
+    def paged_prefill_step(params, cache, tokens, positions, block_tables,
+                           new_lens):
+        out = T.lm_apply(params, arch, tokens, cache=cache,
+                         positions=positions, block_tables=block_tables,
+                         new_lens=new_lens, impl=impl,
+                         act_sharding=act_sharding)
+        last = jnp.take_along_axis(
+            out.logits, (new_lens - 1)[:, None, None], axis=1)
+        return last[:, 0], out.cache
+    return paged_prefill_step
+
+
+def make_paged_decode_step(arch: ArchConfig, *, impl: str = "xla",
+                           act_sharding=None):
+    """-> decode(params, cache, tokens (B,1), positions, block_tables)
+    -> (logits (B,V), cache).  Every batch row advances at its *own*
+    position — slots holding idle/prefilling requests point their block
+    tables at the null block and are masked by the caller."""
+    def paged_decode_step(params, cache, tokens, positions, block_tables):
+        out = T.lm_apply(params, arch, tokens, cache=cache,
+                         positions=positions, block_tables=block_tables,
+                         impl=impl, act_sharding=act_sharding)
+        return out.logits[:, -1], out.cache
+    return paged_decode_step

@@ -1,0 +1,267 @@
+"""Continuous-batching engine: per-slot decode positions over a paged KV
+cache, admission into freed slots every step, chunked prefill interleaved
+with decode.
+
+Contrast with runtime/server.py (the wave baseline, kept for comparison and
+for SSM/cross-attn caches): a wave stalls all slots until the slowest
+request finishes and replays a full-cache prefill per wave.  Here each batch
+row carries its own position vector and block table, so a finished request's
+slot (and its cache blocks) are reused on the very next step, and a long
+prompt is prefilled ``prefill_chunk`` tokens at a time between decode steps
+instead of blocking them.
+
+Engine step = admit -> one prefill chunk -> one decode step:
+  1. every free slot pulls from the RequestScheduler (priority/FCFS +
+     max-tokens budget) if its prompt's blocks fit the pool;
+  2. the oldest prefilling request advances one chunk; finishing the prompt
+     samples its first token (TTFT);
+  3. all decoding slots advance one token.  A slot needing a new block under
+     cache pressure preempts the longest-running request (recompute-style:
+     blocks freed, request requeued with prompt+generated as its new prefill).
+
+Greedy decode is token-for-token identical to the wave Server: the paged
+attention path masks exactly the same prefix (see layers._paged_sdpa), which
+tests/test_serving.py asserts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.core.asa import AdaptiveScheduler
+from repro.launch.mesh import mesh_shape_of
+from repro.runtime import steps as ST
+from repro.serving.metrics import ServingMetrics
+from repro.serving.paged_cache import (PagedCacheConfig, PagedKVCache,
+                                       blocks_for)
+from repro.serving.scheduler import RequestScheduler
+
+PAGEABLE_KINDS = {"attn", "moe_attn"}
+
+
+@dataclasses.dataclass
+class Request:
+    id: int
+    prompt: np.ndarray               # (S,) int32
+    max_new_tokens: int = 16
+    priority: int = 0                # lower = more urgent
+    out_tokens: list = dataclasses.field(default_factory=list)
+    done: bool = False
+    _sched_seq: Optional[int] = None   # set by RequestScheduler (FCFS order)
+
+    def context(self) -> np.ndarray:
+        """prompt + generated-so-far — what a (re-)prefill must cover."""
+        if not self.out_tokens:
+            return np.asarray(self.prompt, np.int32)
+        return np.concatenate([np.asarray(self.prompt, np.int32),
+                               np.asarray(self.out_tokens, np.int32)])
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: Optional[Request] = None
+    state: str = "idle"              # idle | prefill | decode
+    pos: int = 0                     # tokens currently resident in the cache
+    prefill_pos: int = 0             # prompt tokens already prefilled
+
+    @property
+    def busy(self) -> bool:
+        return self.req is not None
+
+
+class ContinuousBatchingEngine:
+    def __init__(self, arch: ArchConfig, params, mesh, *,
+                 slots: int = 4, max_len: int = 512,
+                 block_size: int = 16, num_blocks: Optional[int] = None,
+                 prefill_chunk: int = 64,
+                 scheduler: Optional[RequestScheduler] = None,
+                 asa: Optional[AdaptiveScheduler] = None,
+                 metrics: Optional[ServingMetrics] = None):
+        kinds = {k for seg in arch.pattern for k in seg.blocks}
+        if not kinds <= PAGEABLE_KINDS or arch.encoder or arch.frontend:
+            raise ValueError(
+                f"continuous engine pages attention KV only; {arch.name} has "
+                f"{sorted(kinds - PAGEABLE_KINDS)} — use runtime.server.Server")
+        self.arch, self.mesh = arch, mesh
+        self.max_len, self.prefill_chunk = max_len, prefill_chunk
+        max_blocks_per_seq = blocks_for(max_len, block_size)
+        if num_blocks is None:
+            num_blocks = slots * max_blocks_per_seq + 1   # +1: null block
+        shape = ShapeSpec("serve", max_len, slots, "decode")
+        sched = asa or AdaptiveScheduler(faithful=False)
+        self.plan = sched.plan(arch, shape, mesh_shape_of(mesh))
+        cdtype = jnp.float32 if arch.dtype == "float32" else jnp.bfloat16
+        self.cache = PagedKVCache(
+            arch, PagedCacheConfig(block_size, num_blocks, max_blocks_per_seq),
+            dtype=cdtype, mesh=mesh, specs=self.plan.paged_cache_specs())
+        self.params = jax.device_put(
+            params, jax.tree.map(lambda s: NamedSharding(mesh, s),
+                                 self.plan.param_specs()))
+        self._prefill = jax.jit(ST.make_paged_prefill_step(arch),
+                                donate_argnums=(1,))
+        self._decode = jax.jit(ST.make_paged_decode_step(arch),
+                               donate_argnums=(1,))
+        self.scheduler = scheduler or RequestScheduler()
+        self.metrics = metrics or ServingMetrics()
+        self.slots = [_Slot() for _ in range(slots)]
+        self.completed: list[Request] = []
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request, now: Optional[float] = None) -> None:
+        target = min(len(req.prompt) + req.max_new_tokens, self.max_len)
+        if len(req.prompt) >= self.max_len:
+            raise ValueError(f"prompt ({len(req.prompt)}) >= max_len")
+        if blocks_for(target, self.cache.cfg.block_size) \
+                > self.cache.cfg.num_blocks - 1:
+            raise ValueError(f"request {req.id} can never fit the block pool")
+        self.scheduler.submit(req)
+        self.metrics.on_submit(req.id, now)
+
+    def _target_total(self, req: Request) -> int:
+        # same self-truncation as the wave Server's max_len loop bound
+        return min(len(req.prompt) + req.max_new_tokens, self.max_len)
+
+    # ------------------------------------------------------------------
+    def _sample(self, logits) -> np.ndarray:
+        logits = np.asarray(logits, np.float32)[:, : self.arch.vocab]
+        return np.argmax(logits, axis=-1).astype(np.int32)
+
+    def _finish(self, slot: _Slot) -> None:
+        req = slot.req
+        req.done = True
+        self.cache.release(req.id)
+        self.scheduler.on_finish(req)
+        self.metrics.on_finish(req.id, len(req.out_tokens))
+        self.completed.append(req)
+        slot.req, slot.state, slot.pos, slot.prefill_pos = None, "idle", 0, 0
+
+    def _preempt(self, slot: _Slot) -> None:
+        req = slot.req
+        self.cache.release(req.id)
+        self.scheduler.preempt(req)
+        self.metrics.on_preempt(req.id)
+        slot.req, slot.state, slot.pos, slot.prefill_pos = None, "idle", 0, 0
+
+    # -- phase 1: admission --------------------------------------------
+    def _admit(self) -> None:
+        for slot in self.slots:
+            if slot.busy:
+                continue
+            head = self.scheduler.peek()
+            if head is None:
+                break
+            ctx_len = len(head.context())
+            if not self.cache.can_fit(ctx_len):
+                if not any(s.busy for s in self.slots):
+                    raise RuntimeError(
+                        f"request {head.id} cannot fit an empty pool")
+                break                      # wait for running requests to free
+            req = self.scheduler.next_admission()
+            if req is None:                # token budget exhausted
+                break
+            ok = self.cache.reserve(req.id, len(req.context()))
+            assert ok, "can_fit passed but reserve failed"
+            slot.req, slot.state = req, "prefill"
+            slot.pos, slot.prefill_pos = 0, 0
+
+    # -- phase 2: one chunk of prefill ---------------------------------
+    def _prefill_chunk(self) -> None:
+        # oldest request first (scheduler seq), not lowest slot index — a
+        # newer request admitted into a freed lower slot must not starve an
+        # older mid-prefill request's TTFT
+        prefilling = [s for s in self.slots if s.state == "prefill"]
+        if not prefilling:
+            return
+        slot = min(prefilling, key=lambda s: s.req._sched_seq)
+        req = slot.req
+        ctx = req.context()
+        chunk = ctx[slot.prefill_pos: slot.prefill_pos + self.prefill_chunk]
+        n_new = len(chunk)
+        if n_new < self.prefill_chunk:      # pad: the step traces one shape
+            chunk = np.concatenate(
+                [chunk, np.zeros(self.prefill_chunk - n_new, np.int32)])
+        table = self.cache.table_array([req.id])
+        logits, self.cache.pools = self._prefill(
+            self.params, self.cache.pools, jnp.asarray(chunk[None, :]),
+            jnp.asarray([slot.prefill_pos], jnp.int32), jnp.asarray(table),
+            jnp.asarray([n_new], jnp.int32))
+        slot.prefill_pos += n_new
+        slot.pos = slot.prefill_pos
+        self.metrics.prefill_chunks += 1
+        if slot.prefill_pos == len(ctx):
+            nxt = self._sample(logits)
+            req.out_tokens.append(int(nxt[0]))
+            self.metrics.on_first_token(req.id)
+            slot.state = "decode"
+            if len(ctx) + 1 >= self._target_total(req):
+                self._finish(slot)
+
+    # -- phase 3: one decode step for every decoding slot --------------
+    def _decode_step(self) -> None:
+        decoding = [s for s in self.slots if s.state == "decode"]
+        if not decoding:
+            return
+        # grow block tables; preempt the longest-running request on pressure
+        for slot in list(decoding):
+            if slot.req is None:       # already preempted as an earlier victim
+                continue
+            while not self.cache.reserve(slot.req.id, slot.pos + 1):
+                victims = [s.req for s in self.slots if s.busy]
+                victim = self.scheduler.pick_preemption_victim(victims)
+                vslot = next(s for s in self.slots if s.req is victim)
+                self._preempt(vslot)
+                if vslot in decoding:
+                    decoding.remove(vslot)
+                if slot.req is None:       # we preempted ourselves
+                    break
+        decoding = [s for s in decoding if s.req is not None]
+        if not decoding:
+            return
+        B = len(self.slots)
+        last = np.zeros((B, 1), np.int32)
+        pos = np.zeros((B,), np.int32)
+        rids: list[Optional[int]] = [None] * B
+        for i, s in enumerate(self.slots):
+            if s.state == "decode":
+                last[i, 0] = s.req.out_tokens[-1]
+                pos[i] = s.pos
+                rids[i] = s.req.id
+        table = self.cache.table_array(rids)
+        logits, self.cache.pools = self._decode(
+            self.params, self.cache.pools, jnp.asarray(last),
+            jnp.asarray(pos), jnp.asarray(table))
+        nxt = self._sample(logits)
+        self.metrics.decode_steps += 1
+        for i, s in enumerate(self.slots):
+            if s.state != "decode":
+                continue
+            s.pos += 1
+            s.req.out_tokens.append(int(nxt[i]))
+            if len(s.req.prompt) + len(s.req.out_tokens) \
+                    >= self._target_total(s.req):
+                self._finish(s)
+
+    # ------------------------------------------------------------------
+    def step(self) -> None:
+        self._admit()
+        self._prefill_chunk()
+        self._decode_step()
+        self.metrics.on_step(self.scheduler.queue_depth,
+                             sum(s.busy for s in self.slots), len(self.slots))
+
+    @property
+    def has_work(self) -> bool:
+        return self.scheduler.queue_depth > 0 or any(s.busy for s in self.slots)
+
+    def run_until_drained(self) -> float:
+        t0 = time.perf_counter()
+        while self.has_work:
+            self.step()
+        return time.perf_counter() - t0

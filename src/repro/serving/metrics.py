@@ -1,0 +1,91 @@
+"""Serving metrics: per-request TTFT/TPOT plus engine-level counters.
+
+All timestamps are caller-supplied ``time.perf_counter()`` floats (the
+engine owns the clock; tests pass synthetic times).  ``to_json()`` emits the
+full report; ``write()`` drops it next to the benchmark outputs.
+"""
+from __future__ import annotations
+
+import json
+import time
+from typing import Optional
+
+
+def _mean(xs):
+    return sum(xs) / len(xs) if xs else 0.0
+
+
+class ServingMetrics:
+    def __init__(self):
+        self.submit_t: dict[int, float] = {}
+        self.first_token_t: dict[int, float] = {}
+        self.finish_t: dict[int, float] = {}
+        self.token_counts: dict[int, int] = {}
+        self.queue_depth_samples: list[int] = []
+        self.occupancy_samples: list[float] = []
+        self.preemptions = 0
+        self.engine_steps = 0
+        self.prefill_chunks = 0
+        self.decode_steps = 0
+
+    # -- request lifecycle --------------------------------------------------
+    def on_submit(self, rid: int, now: Optional[float] = None):
+        self.submit_t[rid] = time.perf_counter() if now is None else now
+
+    def on_first_token(self, rid: int, now: Optional[float] = None):
+        # only the first time: a preempted+resumed request keeps its TTFT
+        if rid not in self.first_token_t:
+            self.first_token_t[rid] = time.perf_counter() if now is None else now
+
+    def on_finish(self, rid: int, n_tokens: int, now: Optional[float] = None):
+        self.finish_t[rid] = time.perf_counter() if now is None else now
+        self.token_counts[rid] = n_tokens
+
+    def on_preempt(self, rid: int):
+        self.preemptions += 1
+
+    # -- engine step --------------------------------------------------------
+    def on_step(self, queue_depth: int, busy_slots: int, slots: int):
+        self.engine_steps += 1
+        self.queue_depth_samples.append(queue_depth)
+        self.occupancy_samples.append(busy_slots / max(slots, 1))
+
+    # -- report -------------------------------------------------------------
+    def request_report(self, rid: int) -> dict:
+        ttft = self.first_token_t.get(rid, 0.0) - self.submit_t.get(rid, 0.0)
+        n = self.token_counts.get(rid, 0)
+        decode_span = (self.finish_t.get(rid, 0.0)
+                       - self.first_token_t.get(rid, 0.0))
+        tpot = decode_span / max(n - 1, 1)   # time-per-output-token after first
+        return {"id": rid, "n_tokens": n, "ttft_s": ttft, "tpot_s": tpot}
+
+    def summary(self) -> dict:
+        reqs = [self.request_report(r) for r in sorted(self.finish_t)]
+        total_tokens = sum(self.token_counts.values())
+        if self.submit_t and self.finish_t:
+            span = max(self.finish_t.values()) - min(self.submit_t.values())
+        else:
+            span = 0.0
+        return {
+            "requests": reqs,
+            "completed": len(self.finish_t),
+            "total_tokens": total_tokens,
+            "tokens_per_sec": total_tokens / span if span > 0 else 0.0,
+            "ttft_mean_s": _mean([r["ttft_s"] for r in reqs]),
+            "ttft_max_s": max([r["ttft_s"] for r in reqs], default=0.0),
+            "tpot_mean_s": _mean([r["tpot_s"] for r in reqs]),
+            "queue_depth_mean": _mean(self.queue_depth_samples),
+            "queue_depth_max": max(self.queue_depth_samples, default=0),
+            "slot_occupancy_mean": _mean(self.occupancy_samples),
+            "preemptions": self.preemptions,
+            "engine_steps": self.engine_steps,
+            "prefill_chunks": self.prefill_chunks,
+            "decode_steps": self.decode_steps,
+        }
+
+    def to_json(self, **extra) -> str:
+        return json.dumps({**self.summary(), **extra}, indent=2)
+
+    def write(self, path: str, **extra) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_json(**extra) + "\n")

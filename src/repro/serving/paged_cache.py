@@ -1,0 +1,140 @@
+"""Paged KV cache: fixed-size blocks, free-list allocation, block tables.
+
+The device side is a *physical block pool* per attention layer
+(models/transformer.init_paged_cache — shape (repeat, num_blocks,
+block_size, Hkv, head_dim), no batch axis).  This module is the host side:
+which physical blocks belong to which request, and how many are free.
+
+Block 0 is the reserved **null block**: it is never allocated, idle batch
+slots point every block-table entry at it, and the padded tail of short
+tables also maps there, so stray writes land in a scratch page that no
+live request ever reads (layers.paged_attention masks it out).
+
+Layout respects the ASA plan: ContinuousBatchingEngine device_puts the
+pools with NamedShardings built from SchedulePlan.paged_cache_specs()
+(kv-head axis over `model` — see core/sharding.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as T
+
+NULL_BLOCK = 0
+
+
+def blocks_for(n_tokens: int, block_size: int) -> int:
+    """Physical blocks needed to hold n_tokens."""
+    return -(-n_tokens // block_size)
+
+
+class BlockAllocator:
+    """Free-list allocator over physical block ids 1..num_blocks-1.
+
+    Allocation is all-or-nothing (returns None instead of a partial grant)
+    so a request under cache pressure either fits or triggers preemption —
+    it never strands half-allocated pages.  Double-free and foreign-block
+    frees raise: the invariants the serving tests pin down.
+    """
+
+    def __init__(self, num_blocks: int):
+        assert num_blocks >= 2, "need at least the null block + one real block"
+        self.num_blocks = num_blocks
+        self._free = list(range(num_blocks - 1, 0, -1))   # pop() -> low ids first
+        self._used: set[int] = set()
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def num_used(self) -> int:
+        return len(self._used)
+
+    def alloc(self, n: int) -> Optional[list[int]]:
+        if n < 0:
+            raise ValueError(n)
+        if n > len(self._free):
+            return None
+        blocks = [self._free.pop() for _ in range(n)]
+        self._used.update(blocks)
+        return blocks
+
+    def free(self, blocks: list[int]) -> None:
+        for b in blocks:
+            if b == NULL_BLOCK:
+                raise ValueError("cannot free the null block")
+            if b not in self._used:
+                raise ValueError(f"double free / foreign block {b}")
+            self._used.remove(b)
+            self._free.append(b)
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedCacheConfig:
+    block_size: int
+    num_blocks: int            # physical, including the reserved null block
+    max_blocks_per_seq: int    # block-table width (= ceil(max_len / bs))
+
+
+class PagedKVCache:
+    """Device block pools + allocator + per-request block tables."""
+
+    def __init__(self, arch: ArchConfig, cfg: PagedCacheConfig, *,
+                 dtype=jnp.bfloat16, mesh=None, specs=None):
+        self.arch, self.cfg = arch, cfg
+        pools = T.init_paged_cache(arch, cfg.num_blocks, cfg.block_size, dtype)
+        if mesh is not None and specs is not None:
+            ns = jax.tree.map(lambda s: NamedSharding(mesh, s), specs)
+            pools = jax.device_put(pools, ns)
+        self.pools = pools
+        self.allocator = BlockAllocator(cfg.num_blocks)
+        self.tables: dict[int, list[int]] = {}   # request id -> physical blocks
+
+    # -- allocation ---------------------------------------------------------
+    def reserve(self, rid: int, n_tokens: int) -> bool:
+        """Grow request rid's table to cover n_tokens total; False on OOM
+        (state unchanged — caller preempts or defers admission)."""
+        have = len(self.tables.get(rid, ()))
+        need = blocks_for(n_tokens, self.cfg.block_size) - have
+        if need <= 0:
+            return True
+        got = self.allocator.alloc(need)
+        if got is None:
+            return False
+        self.tables.setdefault(rid, []).extend(got)
+        return True
+
+    def release(self, rid: int) -> None:
+        blocks = self.tables.pop(rid, None)
+        if blocks:
+            self.allocator.free(blocks)
+
+    def can_fit(self, n_tokens: int) -> bool:
+        return blocks_for(n_tokens, self.cfg.block_size) <= self.allocator.num_free
+
+    @property
+    def utilization(self) -> float:
+        usable = self.cfg.num_blocks - 1
+        return self.allocator.num_used / max(usable, 1)
+
+    # -- device-side views --------------------------------------------------
+    def table_row(self, rid: Optional[int]) -> np.ndarray:
+        """(max_blocks_per_seq,) int32, padded with the null block.  rid=None
+        (idle slot) is an all-null row."""
+        row = np.full((self.cfg.max_blocks_per_seq,), NULL_BLOCK, np.int32)
+        if rid is not None:
+            blocks = self.tables[rid]
+            row[: len(blocks)] = blocks
+        return row
+
+    def table_array(self, rids: list[Optional[int]]) -> np.ndarray:
+        """(B, max_blocks_per_seq) int32 block tables for a slot vector."""
+        return np.stack([self.table_row(r) for r in rids])

@@ -1,0 +1,83 @@
+"""Request admission scheduler for the continuous-batching engine.
+
+Policy:
+  * priority classes — lower ``priority`` value is served first;
+  * FCFS inside a class — ties break on arrival sequence, and a preempted
+    request re-enters with its *original* sequence number, so it goes back
+    to the head of its class rather than the tail;
+  * max-tokens budgeting — admission is refused while the worst-case token
+    footprint of running requests (prompt + max_new_tokens each) would
+    exceed ``max_tokens_in_flight``;
+  * preemption — under cache pressure the engine asks for a victim: the
+    longest-running request (most generated tokens) in the lowest priority
+    class, which frees the most blocks per preemption and restarts the
+    request that is cheapest to have delayed last.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from typing import Optional
+
+
+class RequestScheduler:
+    def __init__(self, *, max_tokens_in_flight: Optional[int] = None):
+        self.max_tokens_in_flight = max_tokens_in_flight
+        self._heap: list = []                  # (priority, seq, Request)
+        self._seq = itertools.count()
+        self._in_flight_tokens = 0
+
+    # -- queue --------------------------------------------------------------
+    def submit(self, req) -> None:
+        if (self.max_tokens_in_flight is not None
+                and self._footprint(req) > self.max_tokens_in_flight):
+            raise ValueError(f"request {req.id} exceeds the token budget "
+                             f"({self._footprint(req)} > "
+                             f"{self.max_tokens_in_flight}) — it could never "
+                             f"be admitted")
+        if getattr(req, "_sched_seq", None) is None:
+            req._sched_seq = next(self._seq)   # preserved across preemption
+        heapq.heappush(self._heap, (req.priority, req._sched_seq, req))
+
+    @property
+    def queue_depth(self) -> int:
+        return len(self._heap)
+
+    def peek(self):
+        return self._heap[0][2] if self._heap else None
+
+    # -- admission ----------------------------------------------------------
+    def _footprint(self, req) -> int:
+        return len(req.prompt) + req.max_new_tokens
+
+    def next_admission(self):
+        """Pop the next request iff the token budget admits it, else None.
+        (Head-of-line blocking within the budget is deliberate: skipping
+        ahead would starve large requests.)"""
+        if not self._heap:
+            return None
+        req = self._heap[0][2]
+        if (self.max_tokens_in_flight is not None
+                and self._in_flight_tokens + self._footprint(req)
+                > self.max_tokens_in_flight):
+            return None
+        heapq.heappop(self._heap)
+        self._in_flight_tokens += self._footprint(req)
+        return req
+
+    def on_finish(self, req) -> None:
+        self._in_flight_tokens -= self._footprint(req)
+
+    # -- preemption ---------------------------------------------------------
+    def pick_preemption_victim(self, running: list):
+        """Longest-running request in the lowest priority class, or None."""
+        if not running:
+            return None
+        return max(running, key=lambda r: (r.priority, len(r.out_tokens),
+                                           r._sched_seq))
+
+    def preempt(self, req) -> None:
+        """Return a running request to the queue (recompute-style: its
+        generated tokens stay on the request and are re-prefilled)."""
+        self.on_finish(req)
+        self.submit(req)

@@ -1,7 +1,8 @@
 """Cost-model properties: the physics the solver relies on."""
-import hypothesis
-import hypothesis.strategies as st
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
 
 from repro.core.components import Component
 from repro.core.costmodel import CostModel, MeshShape

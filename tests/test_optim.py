@@ -3,8 +3,10 @@ schedules, clipping, error-feedback compression."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import hypothesis
-import hypothesis.strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
 
 from repro.optim import optimizers as O
 from repro.optim.compression import (compress, decompress_and_update_error,

@@ -1,0 +1,282 @@
+"""Continuous-batching serving subsystem tests: paged-cache invariants,
+scheduler admission/preemption policy, and greedy-decode parity between the
+continuous engine and the wave Server baseline."""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import ArchConfig, Segment, ShapeSpec, SSMSpec
+from repro.core.asa import AdaptiveScheduler
+from repro.launch.mesh import make_host_mesh, mesh_shape_of
+from repro.models import transformer as T
+from repro.runtime.server import Request as WaveRequest, Server
+from repro.serving import (BlockAllocator, ContinuousBatchingEngine,
+                           PagedKVCache, Request, RequestScheduler,
+                           ServingMetrics)
+from repro.serving.paged_cache import NULL_BLOCK, PagedCacheConfig, blocks_for
+
+TINY = ArchConfig(name="tiny-serve", family="dense", n_layers=2, d_model=64,
+                  n_heads=4, n_kv_heads=2, d_ff=128, vocab=256,
+                  pattern=(Segment(("attn",), 2),), dtype="float32",
+                  param_dtype="float32")
+
+TINY_SSM = ArchConfig(name="tiny-ssm", family="ssm", n_layers=2, d_model=64,
+                      n_heads=4, n_kv_heads=4, d_ff=128, vocab=256,
+                      ssm=SSMSpec(d_state=16, head_dim=16, chunk=16),
+                      pattern=(Segment(("mamba2",), 2),), dtype="float32",
+                      param_dtype="float32")
+
+
+# ---------------------------------------------------------------------------
+# paged cache
+# ---------------------------------------------------------------------------
+
+def test_block_allocator_invariants():
+    a = BlockAllocator(8)                     # blocks 1..7 usable
+    assert a.num_free == 7
+    got = a.alloc(3)
+    assert len(got) == 3 and NULL_BLOCK not in got
+    assert a.num_free == 4 and a.num_used == 3
+    # all-or-nothing: over-ask leaves state untouched
+    assert a.alloc(5) is None
+    assert a.num_free == 4
+    a.free(got[:2])
+    assert a.num_free == 6
+    with pytest.raises(ValueError):           # double free
+        a.free(got[:1])
+    with pytest.raises(ValueError):           # null block is never freeable
+        a.free([NULL_BLOCK])
+    # freed blocks are reused
+    again = a.alloc(6)
+    assert again is not None and set(got[:2]) <= set(again)
+
+
+def test_paged_cache_reserve_release_reuse():
+    cache = PagedKVCache(TINY, PagedCacheConfig(block_size=4, num_blocks=9,
+                                                max_blocks_per_seq=4),
+                         dtype=np.float32)
+    assert cache.reserve(0, 10)               # 3 blocks
+    assert cache.allocator.num_used == 3
+    assert cache.reserve(0, 12)               # same 3 blocks suffice
+    assert cache.allocator.num_used == 3
+    assert cache.reserve(0, 13)               # grows by one
+    assert cache.allocator.num_used == 4
+    assert cache.reserve(1, 16)               # 4 more -> pool full (8 usable)
+    assert not cache.reserve(2, 1)            # OOM, state unchanged
+    assert 2 not in cache.tables
+    cache.release(0)
+    assert cache.allocator.num_used == 4
+    assert cache.reserve(2, 16)               # reuses request 0's blocks
+    row = cache.table_row(2)
+    assert row.shape == (4,) and NULL_BLOCK not in row
+    assert (cache.table_row(None) == NULL_BLOCK).all()
+
+
+def test_blocks_for():
+    assert blocks_for(1, 4) == 1
+    assert blocks_for(4, 4) == 1
+    assert blocks_for(5, 4) == 2
+
+
+def test_paged_cache_specs_match_pool_tree():
+    mesh = make_host_mesh()
+    plan = AdaptiveScheduler(faithful=False).plan(
+        TINY, ShapeSpec("serve", 64, 2, "decode"), mesh_shape_of(mesh))
+    pools = T.init_paged_cache(TINY, 8, 4, np.float32)
+    specs = plan.paged_cache_specs()
+    assert jax.tree.structure(pools) == jax.tree.structure(specs)
+
+
+# ---------------------------------------------------------------------------
+# scheduler
+# ---------------------------------------------------------------------------
+
+def _req(i, plen=8, max_new=4, priority=0):
+    return Request(id=i, prompt=np.arange(1, plen + 1, dtype=np.int32),
+                   max_new_tokens=max_new, priority=priority)
+
+
+def test_scheduler_fcfs_within_priority_class():
+    s = RequestScheduler()
+    for i in range(3):
+        s.submit(_req(i))
+    urgent = _req(99, priority=-1)
+    s.submit(urgent)
+    order = [s.next_admission().id for _ in range(4)]
+    assert order == [99, 0, 1, 2]
+
+
+def test_scheduler_token_budget_blocks_admission():
+    s = RequestScheduler(max_tokens_in_flight=30)
+    s.submit(_req(0, plen=8, max_new=4))      # footprint 12
+    s.submit(_req(1, plen=8, max_new=4))
+    s.submit(_req(2, plen=8, max_new=4))
+    a, b = s.next_admission(), s.next_admission()
+    assert a.id == 0 and b.id == 1
+    assert s.next_admission() is None         # 24 + 12 > 30
+    s.on_finish(a)
+    assert s.next_admission().id == 2
+    with pytest.raises(ValueError):           # can never be admitted
+        s.submit(_req(3, plen=40, max_new=4))
+
+
+def test_scheduler_preemption_victim_and_requeue_order():
+    s = RequestScheduler()
+    for i in range(3):
+        s.submit(_req(i))
+    running = [s.next_admission() for _ in range(2)]
+    running[0].out_tokens = [1, 2, 3]         # longest-running
+    running[1].out_tokens = [1]
+    victim = s.pick_preemption_victim(running)
+    assert victim.id == 0
+    s.preempt(victim)
+    # preempted request keeps its original arrival seq: head of its class
+    assert s.next_admission().id == 0
+    # priority dominates generated length
+    hi = _req(7, priority=-1); hi.out_tokens = [1, 2, 3, 4]
+    assert s.pick_preemption_victim([hi, running[1]]).id == running[1].id
+
+
+# ---------------------------------------------------------------------------
+# engine
+# ---------------------------------------------------------------------------
+
+def _wave_outputs(params, mesh, prompts, max_new):
+    srv = Server(TINY, params, mesh, slots=2, max_len=64)
+    for i, p in enumerate(prompts):
+        srv.submit(WaveRequest(id=i, prompt=p.copy(), max_new_tokens=max_new))
+    srv.run_until_drained()
+    return {r.id: r.out_tokens for r in srv.completed}
+
+
+def test_continuous_engine_greedy_parity_with_wave():
+    mesh = make_host_mesh()
+    params = T.init_lm(jax.random.PRNGKey(0), TINY)
+    prompts = [np.arange(1, 9, dtype=np.int32) + i for i in range(5)]
+    wave = _wave_outputs(params, mesh, prompts, max_new=6)
+
+    # chunked prefill (chunk 3 < prompt 8) + slot churn (5 reqs, 2 slots)
+    eng = ContinuousBatchingEngine(TINY, params, mesh, slots=2, max_len=64,
+                                   block_size=4, prefill_chunk=3)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(id=i, prompt=p.copy(), max_new_tokens=6))
+    eng.run_until_drained()
+    cont = {r.id: r.out_tokens for r in eng.completed}
+    assert cont == wave                       # token-for-token
+    assert eng.metrics.summary()["completed"] == 5
+    assert eng.cache.allocator.num_used == 0  # every block returned
+
+
+def test_continuous_engine_parity_under_preemption():
+    mesh = make_host_mesh()
+    params = T.init_lm(jax.random.PRNGKey(0), TINY)
+    prompts = [np.arange(1, 9, dtype=np.int32) + i for i in range(4)]
+    wave = _wave_outputs(params, mesh, prompts, max_new=8)
+
+    # 7 usable blocks * 4 tokens < 2 slots * 16 tokens -> cache pressure
+    eng = ContinuousBatchingEngine(TINY, params, mesh, slots=2, max_len=64,
+                                   block_size=4, num_blocks=8,
+                                   prefill_chunk=8)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(id=i, prompt=p.copy(), max_new_tokens=8))
+    eng.run_until_drained()
+    cont = {r.id: r.out_tokens for r in eng.completed}
+    assert cont == wave                       # recompute-preemption is exact
+    assert eng.metrics.preemptions > 0
+    assert eng.cache.allocator.num_used == 0
+
+
+def test_parity_with_multiple_victims_in_one_step():
+    """Regression: a slot preempted as a victim for an earlier slot's block
+    grab must be skipped by the rest of that decode step (slot.req is None).
+    4 decoding slots x 2 blocks each > 6 usable blocks forces it."""
+    mesh = make_host_mesh()
+    params = T.init_lm(jax.random.PRNGKey(0), TINY)
+    prompts = [np.arange(1, 17, dtype=np.int32) + i for i in range(6)]
+    srv = Server(TINY, params, mesh, slots=4, max_len=64)
+    for i, p in enumerate(prompts):
+        srv.submit(WaveRequest(id=i, prompt=p.copy(), max_new_tokens=8))
+    srv.run_until_drained()
+    wave = {r.id: r.out_tokens for r in srv.completed}
+
+    eng = ContinuousBatchingEngine(TINY, params, mesh, slots=4, max_len=64,
+                                   block_size=16, num_blocks=7,
+                                   prefill_chunk=16)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(id=i, prompt=p.copy(), max_new_tokens=8))
+    eng.run_until_drained()
+    assert {r.id: r.out_tokens for r in eng.completed} == wave
+    assert eng.metrics.preemptions > 0
+
+
+def test_parity_with_mixed_max_new_tokens():
+    """Regression: the wave Server's decode bound must follow the *active*
+    requests — with mixed max_new a finished slot 0 used to let longer
+    requests decode past max_len into a clamped (corrupting) cache write.
+    Both engines must truncate the long request identically."""
+    mesh = make_host_mesh()
+    params = T.init_lm(jax.random.PRNGKey(0), TINY)
+    prompts = [np.arange(1, 9, dtype=np.int32) + i for i in range(2)]
+    max_news = [2, 20]                        # 8 + 20 > max_len=12
+    srv = Server(TINY, params, mesh, slots=2, max_len=12)
+    for i, p in enumerate(prompts):
+        srv.submit(WaveRequest(id=i, prompt=p.copy(),
+                               max_new_tokens=max_news[i]))
+    srv.run_until_drained()
+    wave = {r.id: r.out_tokens for r in srv.completed}
+    assert len(wave[1]) <= 12 - 8             # truncated at max_len
+
+    eng = ContinuousBatchingEngine(TINY, params, mesh, slots=2, max_len=12,
+                                   block_size=4, prefill_chunk=8)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(id=i, prompt=p.copy(),
+                           max_new_tokens=max_news[i]))
+    eng.run_until_drained()
+    assert {r.id: r.out_tokens for r in eng.completed} == wave
+
+
+def test_prefill_serves_oldest_request_first():
+    """Regression: chunked prefill must advance the oldest admitted request
+    (scheduler FCFS seq), not the lowest slot index."""
+    mesh = make_host_mesh()
+    params = T.init_lm(jax.random.PRNGKey(0), TINY)
+    eng = ContinuousBatchingEngine(TINY, params, mesh, slots=2, max_len=64,
+                                   block_size=4, prefill_chunk=2)
+    older, newer = _req(0, plen=8), _req(1, plen=8)
+    eng.submit(older)
+    eng.submit(newer)
+    eng._admit()
+    # simulate slot churn: the older request ends up in the *higher* slot
+    eng.slots[0], eng.slots[1] = eng.slots[1], eng.slots[0]
+    assert eng.slots[0].req is newer and eng.slots[1].req is older
+    eng._prefill_chunk()
+    assert eng.slots[1].prefill_pos == 2      # older advanced
+    assert eng.slots[0].prefill_pos == 0      # newer waits
+
+
+def test_engine_rejects_non_attention_arch():
+    mesh = make_host_mesh()
+    params = T.init_lm(jax.random.PRNGKey(0), TINY_SSM)
+    with pytest.raises(ValueError, match="wave|Server|attention"):
+        ContinuousBatchingEngine(TINY_SSM, params, mesh)
+
+
+def test_metrics_json_report():
+    m = ServingMetrics()
+    m.on_submit(0, now=0.0)
+    m.on_first_token(0, now=0.5)
+    m.on_first_token(0, now=9.9)              # resumed request: TTFT kept
+    m.on_step(queue_depth=1, busy_slots=1, slots=2)
+    m.on_finish(0, n_tokens=3, now=1.5)
+    rep = json.loads(m.to_json(engine="continuous"))
+    assert rep["engine"] == "continuous"
+    assert rep["completed"] == 1 and rep["total_tokens"] == 3
+    assert rep["requests"][0]["ttft_s"] == pytest.approx(0.5)
+    assert rep["requests"][0]["tpot_s"] == pytest.approx(0.5)  # 1.0s / 2
+    assert rep["tokens_per_sec"] == pytest.approx(2.0)         # 3 tok / 1.5s
+    assert rep["slot_occupancy_mean"] == pytest.approx(0.5)
+    for key in ("ttft_mean_s", "tpot_mean_s", "queue_depth_max",
+                "preemptions", "decode_steps"):
+        assert key in rep

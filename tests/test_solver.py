@@ -1,7 +1,8 @@
 """ASA solver property tests (hypothesis) — the paper's core invariants."""
-import hypothesis
-import hypothesis.strategies as st
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
 
 from repro.core.components import Component
 from repro.core.costmodel import CostModel, MeshShape
