@@ -2,7 +2,10 @@
 
 Trace: mixed prompt lengths, Poisson arrivals.  Both engines see the same
 requests in the same arrival order; results (throughput, TTFT, TPOT,
-latency, occupancy, preemptions) land in BENCH_serving.json.
+latency, occupancy, preemptions) land in BENCH_serving.json — one row per
+architecture, including a non-attention-only row (mamba2-780m: SSM state
+served through the slot-state pools) since the continuous engine covers
+hybrid / cross-attn archs.
 
 The wave baseline requires equal-length prompts per wave, so the harness
 pads each wave group to its max prompt length client-side — that padding
@@ -29,20 +32,24 @@ from repro.configs import ARCHS, reduce_for_smoke
 from repro.launch.mesh import make_host_mesh
 from repro.models import transformer as T
 from repro.runtime.server import Request as WaveRequest, Server
-from repro.serving import ContinuousBatchingEngine, Request
+from repro.serving import ContinuousBatchingEngine, Request, ServingMetrics
 
 ROOT = pathlib.Path(__file__).resolve().parents[1]
 
 
 def make_trace(n: int, rate_hz: float, vocab: int, seed: int = 0):
-    """[(arrival_s, prompt, max_new)] — Poisson arrivals, mixed lengths."""
+    """[(arrival_s, prompt, max_new)] — Poisson arrivals, mixed prompt *and*
+    output lengths (a wave stalls every slot until its slowest request
+    finishes, so output-length variance is precisely what continuous
+    batching reclaims)."""
     rng = np.random.default_rng(seed)
     t, trace = 0.0, []
     for _ in range(n):
         t += rng.exponential(1.0 / rate_hz)
         plen = int(rng.choice([8, 16, 24, 48]))
+        max_new = int(rng.choice([4, 8, 16, 32]))
         prompt = rng.integers(1, vocab, size=plen).astype(np.int32)
-        trace.append((t, prompt, 16))
+        trace.append((t, prompt, max_new))
     return trace
 
 
@@ -103,23 +110,21 @@ def bench_wave(arch, params, mesh, trace, *, slots, max_len):
         _pad_group(group)
         srv._run_wave(group)
     wall = time.perf_counter() - t0
-    reqs = []
+    # feed the wave timestamps through ServingMetrics so TTFT/TPOT use the
+    # same definitions as the continuous rows they are compared against
+    m = ServingMetrics()
     for r in srv.completed:
-        ft = srv.first_token_t[r.id] - t0
-        fin = srv.finish_t[r.id] - t0
-        n = len(r.out_tokens)
-        reqs.append({"id": r.id, "n_tokens": n,
-                     "ttft_s": ft - arrival[r.id],
-                     "tpot_s": (fin - ft) / max(n - 1, 1),
-                     "latency_s": fin - arrival[r.id]})
-    total = sum(r["n_tokens"] for r in reqs)
-    return {"engine": "wave", "wall_s": wall, "total_tokens": total,
-            "tokens_per_sec": total / wall,
-            "ttft_mean_s": float(np.mean([r["ttft_s"] for r in reqs])),
-            "tpot_mean_s": float(np.mean([r["tpot_s"] for r in reqs])),
-            "latency_mean_s": float(np.mean([r["latency_s"] for r in reqs])),
-            "waves": srv.waves, "decode_steps": srv.decode_steps,
-            "requests": reqs}
+        m.on_submit(r.id, arrival[r.id])
+        m.on_first_token(r.id, srv.first_token_t[r.id] - t0)
+        m.on_finish(r.id, len(r.out_tokens), srv.finish_t[r.id] - t0)
+    out = m.summary()
+    out.update(engine="wave", wall_s=wall,
+               tokens_per_sec=out["total_tokens"] / wall,
+               latency_mean_s=float(np.mean(
+                   [m.finish_t[r.id] - arrival[r.id]
+                    for r in srv.completed])),
+               waves=srv.waves, decode_steps=srv.decode_steps)
+    return out
 
 
 def bench_continuous(arch, params, mesh, trace, *, slots, max_len,
@@ -132,9 +137,12 @@ def bench_continuous(arch, params, mesh, trace, *, slots, max_len,
     while pending or eng.has_work:
         now = time.perf_counter() - t0
         while pending and pending[0][1][0] <= now:
-            i, (_, prompt, max_new) = pending.pop(0)
+            i, (arrival_s, prompt, max_new) = pending.pop(0)
+            # stamp TTFT from trace *arrival* like the wave rows, not from
+            # when the polling loop got around to submitting
             eng.submit(Request(id=i, prompt=prompt.copy(),
-                               max_new_tokens=max_new))
+                               max_new_tokens=max_new),
+                       now=t0 + arrival_s)
         if eng.has_work:
             eng.step()
         elif pending:
@@ -146,25 +154,11 @@ def bench_continuous(arch, params, mesh, trace, *, slots, max_len,
     return out
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen3-8b")
-    ap.add_argument("--requests", type=int, default=12)
-    ap.add_argument("--rate", type=float, default=8.0,
-                    help="Poisson arrival rate (req/s)")
-    ap.add_argument("--slots", type=int, default=4)
-    ap.add_argument("--max-len", type=int, default=128)
-    ap.add_argument("--block-size", type=int, default=16)
-    ap.add_argument("--prefill-chunk", type=int, default=32)
-    ap.add_argument("--out", default=str(ROOT / "BENCH_serving.json"))
-    args = ap.parse_args()
-
-    arch = reduce_for_smoke(ARCHS[args.arch])
+def bench_arch(arch_name, args, mesh):
+    arch = reduce_for_smoke(ARCHS[arch_name])
     params = T.init_lm(jax.random.PRNGKey(0), arch)
-    mesh = make_host_mesh()
     trace = make_trace(args.requests, args.rate, arch.vocab)
-
-    results = {"arch": arch.name, "trace": {
+    row = {"arch": arch.name, "family": arch.family, "trace": {
         "requests": args.requests, "rate_hz": args.rate,
         "prompt_lens": sorted({len(p) for _, p, _ in trace})}}
     for name, fn, kw in [
@@ -175,17 +169,40 @@ def main():
     ]:
         r = fn(arch, params, mesh, trace, slots=args.slots,
                max_len=args.max_len, **kw)
-        results[name] = r
-        print(f"[{name}] {r['total_tokens']} tokens "
+        row[name] = r
+        print(f"[{arch.name}/{name}] {r['total_tokens']} tokens "
               f"{r['tokens_per_sec']:.1f} tok/s "
               f"ttft {r['ttft_mean_s']*1e3:.0f}ms "
               f"tpot {r['tpot_mean_s']*1e3:.1f}ms")
-    results["speedup_tokens_per_sec"] = (
-        results["continuous"]["tokens_per_sec"]
-        / results["wave"]["tokens_per_sec"])
+    row["speedup_tokens_per_sec"] = (
+        row["continuous"]["tokens_per_sec"]
+        / row["wave"]["tokens_per_sec"])
+    print(f"[{arch.name}] speedup {row['speedup_tokens_per_sec']:.2f}x")
+    return row
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--archs", default="qwen3-8b,mamba2-780m",
+                    help="comma-separated arch rows (attention-only + "
+                         "slot-state archs)")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--rate", type=float, default=8.0,
+                    help="Poisson arrival rate (req/s)")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--prefill-chunk", type=int, default=32)
+    ap.add_argument("--out", default=str(ROOT / "BENCH_serving.json"))
+    args = ap.parse_args()
+
+    mesh = make_host_mesh()
+    results = {"archs": {}}
+    for arch_name in (s.strip() for s in args.archs.split(",")):
+        results["archs"][arch_name] = bench_arch(arch_name, args, mesh)
     with open(args.out, "w") as f:
         json.dump(results, f, indent=2)
-    print(f"speedup {results['speedup_tokens_per_sec']:.2f}x -> {args.out}")
+    print(f"-> {args.out}")
 
 
 if __name__ == "__main__":

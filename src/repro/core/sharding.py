@@ -347,25 +347,41 @@ def cache_specs(arch: ArchConfig, assignment: dict[str, Strategy],
 
 def paged_cache_specs(arch: ArchConfig, assignment: dict[str, Strategy],
                       mesh: MeshShape):
-    """Spec tree mirroring init_paged_cache: per-segment stacked block pools.
+    """Spec tree mirroring init_paged_cache: per-segment stacked pools for
+    both serving state classes.
 
-    Pool dims are (repeat, num_blocks, block_size, Hkv, head_dim).  The pool
-    has no batch axis and its block axis is gathered through block tables
-    every step, so unlike cache_specs the time axis cannot carry the MP
-    shard; instead the kv-head axis shards over `model` (the classic paged-KV
-    layout) whenever the head count divides, else the pool is replicated."""
+    attn-family block pools are (repeat, num_blocks, block_size, Hkv,
+    head_dim).  They have no batch axis and their block axis is gathered
+    through block tables every step, so unlike cache_specs the time axis
+    cannot carry the MP shard; instead the kv-head axis shards over `model`
+    (the classic paged-KV layout) whenever the head count divides, else the
+    pool is replicated.
+
+    Slot-state pools have a leading (repeat, slots+1) prefix.  mamba2 state
+    shards its SSM head axis over `model` (mirroring the training-plan cache
+    layout); cross-attn K/V shards its kv-head axis like the attn pools."""
     specs = []
     for si, seg in enumerate(arch.pattern):
         seg_spec = {}
         for bi, kind in enumerate(seg.blocks):
-            if kind not in ("attn", "moe_attn"):
+            if kind not in ("attn", "moe_attn", "mamba2", "cross_attn"):
                 raise ValueError(
-                    f"paged KV cache unsupported for block kind {kind!r}")
+                    f"paged/slot-state cache unsupported for block kind "
+                    f"{kind!r}")
             comp = f"seg{si}/b{bi}:{kind}.mixer" if kind in SPLIT_KEYS \
                 else f"seg{si}/b{bi}:{kind}"
             strat = assignment.get(comp, Strategy.DP)
-            h_ax = "model" if (strat in (Strategy.MP, Strategy.HP)
-                               and _kv_heads_ok(arch, mesh)) else None
+            mp = strat in (Strategy.MP, Strategy.HP)
+            if kind == "mamba2":
+                H = (arch.ssm.expand * arch.d_model) // arch.ssm.head_dim
+                h_ax = "model" if (mp and _div(H, mesh.model)) else None
+                seg_spec[f"b{bi}"] = {
+                    "conv_x": P(None, None, None, h_ax),
+                    "conv_b": P(None, None, None, None),
+                    "conv_c": P(None, None, None, None),
+                    "ssm": P(None, None, h_ax, None, None)}
+                continue
+            h_ax = "model" if (mp and _kv_heads_ok(arch, mesh)) else None
             pool = P(None, None, None, h_ax, None)
             seg_spec[f"b{bi}"] = {"k": pool, "v": pool}
         specs.append(seg_spec)

@@ -4,10 +4,15 @@
         --engine continuous --requests 8 --prompt-len 16 --max-new 12
 
 --engine wave        batched prefill + lock-step decode waves (baseline,
-                     runtime/server.py — only path for SSM/cross-attn caches)
---engine continuous  paged-KV continuous batching with chunked prefill and
-                     per-slot positions (repro/serving/), emits a JSON
-                     metrics report (TTFT/TPOT/occupancy/tokens-per-sec).
+                     runtime/server.py — only path for zamba2's shared
+                     block and whisper's encoder-decoder)
+--engine continuous  continuous batching over the unified serving cache
+                     (paged KV block pools + slot-state pools for SSM /
+                     cross-attn state) with chunked prefill and per-slot
+                     positions (repro/serving/), emits a JSON metrics
+                     report (TTFT/TPOT/occupancy/tokens-per-sec).  Serves
+                     attention-only, hybrid attn+SSM (mamba2-780m) and
+                     cross-attention (llama-3.2-vision-90b) configs.
 """
 from __future__ import annotations
 

@@ -171,14 +171,32 @@ def init_block_cache(kind: str, arch: ArchConfig, batch: int, max_len: int,
 
 
 def init_paged_block_cache(kind: str, arch: ArchConfig, num_blocks: int,
-                           block_size: int, dtype=jnp.bfloat16) -> Params:
-    """Physical KV block pool for one block (attn-family kinds only — SSM /
-    cross-attention states are not length-indexed, so paging does not apply;
-    the wave Server in runtime/server.py remains the path for those)."""
+                           block_size: int, dtype=jnp.bfloat16, *,
+                           slots: int = 0) -> Params:
+    """Serving cache pool for one block (continuous-batching engine).
+
+    attn-family kinds get a physical KV *block pool* (length-indexed, paged
+    through block tables).  mamba2 / cross_attn state is O(1) per request —
+    not length-indexed, so paging does not apply; they get a *slot-indexed
+    state pool* instead: ``slots`` rows plus a trailing reserved null row
+    (see models/mamba2.mamba2_slot).  Other kinds (zamba2's shared block,
+    whisper's enc-dec) stay on the wave Server in runtime/server.py."""
     if kind in ("attn", "moe_attn"):
         return L.init_paged_attention_cache(attn_cfg_for(arch), num_blocks,
                                             block_size, dtype)
-    raise ValueError(f"paged KV cache unsupported for block kind {kind!r}")
+    if kind in ("mamba2", "cross_attn"):
+        if slots <= 0:
+            raise ValueError(
+                f"slot-state pool for {kind!r} needs slots > 0 (one state "
+                f"row per engine slot + the null row)")
+        if kind == "mamba2":
+            # fp32 recurrent state, matching init_block_cache's wave path
+            return M2.init_mamba2_cache(ssm_cfg_for(arch), slots + 1)
+        cfg = attn_cfg_for(arch, causal=False, use_rope=False)
+        shp = (slots + 1, arch.n_img_tokens, cfg.n_kv_heads, cfg.head_dim)
+        return {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype)}
+    raise ValueError(f"paged/slot-state cache unsupported for block kind "
+                     f"{kind!r} — use runtime.server.Server")
 
 
 # ---------------------------------------------------------------------------
@@ -193,12 +211,16 @@ def apply_block(p: Params, kind: str, arch: ArchConfig, x: Array, *,
                 positions: Optional[Array] = None,
                 block_tables: Optional[Array] = None,
                 new_lens: Optional[Array] = None,
+                slot_ids: Optional[Array] = None,
                 impl: str = "xla"):
     """-> (x, new_cache, aux_loss).  ``block_tables`` selects the paged-KV
-    decode path (attn-family kinds only; see serving/paged_cache.py)."""
+    decode path for attn-family kinds; ``slot_ids`` selects the slot-state
+    pool path for mamba2 / cross_attn (see serving/cache_manager.py)."""
     aux = ZERO
-    if block_tables is not None and kind not in ("attn", "moe_attn"):
-        raise ValueError(f"paged KV cache unsupported for block kind {kind!r}")
+    if (block_tables is not None or slot_ids is not None) and \
+            kind not in ("attn", "moe_attn", "mamba2", "cross_attn"):
+        raise ValueError(f"continuous-batching serving unsupported for block "
+                         f"kind {kind!r} — use runtime.server.Server")
     if kind in ("attn", "enc_attn", "moe_attn"):
         causal = kind != "enc_attn"
         cfg = attn_cfg_for(arch, causal=causal, use_rope=(kind != "enc_attn"))
@@ -227,15 +249,32 @@ def apply_block(p: Params, kind: str, arch: ArchConfig, x: Array, *,
         return x + h, new_cache, aux
 
     if kind == "mamba2":
-        h, new_cache = M2.mamba2(p["mixer"], ssm_cfg_for(arch),
-                                 norm_apply(arch, p["norm"], x), cache=cache,
-                                 impl=impl)
+        normed = norm_apply(arch, p["norm"], x)
+        if slot_ids is not None:
+            h, new_cache = M2.mamba2_slot(p["mixer"], ssm_cfg_for(arch),
+                                          normed, pool=cache,
+                                          slot_ids=slot_ids,
+                                          new_lens=new_lens, impl=impl)
+        else:
+            h, new_cache = M2.mamba2(p["mixer"], ssm_cfg_for(arch), normed,
+                                     cache=cache, impl=impl)
         return x + h, new_cache, aux
 
     if kind == "cross_attn":
         cfg = attn_cfg_for(arch, causal=False, gated=True, use_rope=False)
-        h, new_cache = L.attention(p["attn"], cfg, norm_apply(arch, p["norm1"], x),
-                                   kv_input=cross_input, cache=cache, impl=impl)
+        if slot_ids is not None:
+            # slot-state pool: per-request cross K/V rows are read-only here
+            # (written once at admission — transformer.admit_slot)
+            rows = {"k": cache["k"][slot_ids], "v": cache["v"][slot_ids]}
+            h, _ = L.attention(p["attn"], cfg,
+                               norm_apply(arch, p["norm1"], x),
+                               cache=rows, impl=impl)
+            new_cache = cache
+        else:
+            h, new_cache = L.attention(p["attn"], cfg,
+                                       norm_apply(arch, p["norm1"], x),
+                                       kv_input=cross_input, cache=cache,
+                                       impl=impl)
         x = x + h
         h = L.mlp(p["mlp"], norm_apply(arch, p["norm2"], x), arch.act)
         x = x + jnp.tanh(p["mlp_gate"].astype(h.dtype)) * h

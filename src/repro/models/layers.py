@@ -276,10 +276,15 @@ def paged_attention(p: Params, cfg: AttnConfig, x: Array, *,
         q = apply_rope(q, qp, cfg.rope_theta)
         k = apply_rope(k, qp, cfg.rope_theta)
     # scatter new k/v into their pages (flat row index = block * BS + offset)
-    blk = jnp.take_along_axis(block_tables,
-                              jnp.minimum(qp // BS, block_tables.shape[1] - 1),
+    logical = qp // BS
+    width = block_tables.shape[1]
+    blk = jnp.take_along_axis(block_tables, jnp.minimum(logical, width - 1),
                               axis=1)
     flat = blk * BS + qp % BS                                # (B, S)
+    # out-of-table writes (position beyond the table's capacity) go to the
+    # null-block scratch — clamping them into the request's *last* block
+    # would silently overwrite live KV on overrun
+    flat = jnp.where(logical < width, flat, qp % BS)
     if new_lens is not None:   # padded rows -> null-block scratch offsets
         valid = jnp.arange(S)[None, :] < new_lens[:, None]
         flat = jnp.where(valid, flat, jnp.arange(S)[None, :] % BS)

@@ -90,13 +90,37 @@ def init_mamba2_cache(cfg: Mamba2Config, batch: int, dtype=jnp.float32) -> Param
     }
 
 
-def _causal_conv(u: Array, conv: Params) -> Array:
-    """Depthwise causal conv1d + silu. u: (B,S,C); w: (K,C)."""
+def _causal_conv(u: Array, conv: Params,
+                 left: Optional[Array] = None) -> Array:
+    """Depthwise causal conv1d + silu. u: (B,S,C); w: (K,C).
+
+    ``left`` (B, K-1, C) supplies the raw inputs *preceding* u — the carried
+    conv buffer during chunked prefill.  None means start-of-sequence
+    (zero left context, identical to the old zero-padding)."""
     w = conv["w"]
     K = w.shape[0]
-    pad = jnp.pad(u, ((0, 0), (K - 1, 0), (0, 0)))
+    if left is None:
+        pad = jnp.pad(u, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        pad = jnp.concatenate([left.astype(u.dtype), u], axis=1)
     out = sum(pad[:, k: k + u.shape[1], :] * w[k].astype(u.dtype) for k in range(K))
     return jax.nn.silu(out + conv["b"].astype(u.dtype))
+
+
+def _conv_tail(buf: Array, raw: Array,
+               new_lens: Optional[Array] = None) -> Array:
+    """Next conv buffer: last (d_conv-1) valid raw inputs of buffer+chunk.
+
+    buf: (B, K, C) carried buffer; raw: (B, S, C) this chunk's raw conv
+    inputs; new_lens (B,) marks rows >= new_lens[b] as padding to skip.
+    Always yields K rows even when the valid chunk is shorter than K (the
+    old buffer supplies the missing left context)."""
+    K = buf.shape[1]
+    full = jnp.concatenate([buf, raw.astype(buf.dtype)], axis=1)  # (B,K+S,C)
+    if new_lens is None:
+        return full[:, -K:, :]
+    idx = (new_lens[:, None] + jnp.arange(K))[:, :, None]         # (B,K,1)
+    return jnp.take_along_axis(full, idx, axis=1)
 
 
 def _conv_step(u_new: Array, buf: Array, conv: Params) -> tuple[Array, Array]:
@@ -167,8 +191,17 @@ def _ssd_chunked(cfg: Mamba2Config, x, Bm, Cm, dt_a, h0=None):
 
 def mamba2(p: Params, cfg: Mamba2Config, x: Array, *,
            cache: Optional[Params] = None,
+           new_lens: Optional[Array] = None,
            impl: str = "xla") -> tuple[Array, Optional[Params]]:
-    """x: (B,S,D).  With ``cache`` and S==1 runs the recurrent decode path."""
+    """x: (B,S,D).  With ``cache`` and S==1 runs the recurrent decode path.
+
+    With ``cache`` and S>1 (prefill) the cached conv buffers supply the raw
+    left context and the cached SSM state seeds the scan (h0), so a prompt
+    may be fed in several chunks and the handoff state is exact at every
+    chunk boundary.  ``new_lens`` (B,) marks token rows >= new_lens[b] as
+    padding: their dt is zeroed (decay 1, zero input — state untouched) and
+    they never enter the carried conv buffer, so fixed-shape prompt chunks
+    trace once (see layers.paged_attention for the attention analogue)."""
     Bsz, S, D = x.shape
     H, P, G, N = cfg.n_heads, cfg.head_dim, cfg.n_groups, cfg.d_state
     z = L.dense(p["z_proj"], x)
@@ -197,12 +230,19 @@ def mamba2(p: Params, cfg: Mamba2Config, x: Array, *,
         new_cache = {"conv_x": conv_x, "conv_b": conv_b, "conv_c": conv_c,
                      "ssm": h.astype(cache["ssm"].dtype)}
     else:
-        xc = _causal_conv(xr, p["conv_x"])
-        bc = _causal_conv(br, p["conv_b"])
-        cc = _causal_conv(cr, p["conv_c"])
+        left_x = cache["conv_x"] if cache is not None else None
+        left_b = cache["conv_b"] if cache is not None else None
+        left_c = cache["conv_c"] if cache is not None else None
+        xc = _causal_conv(xr, p["conv_x"], left=left_x)
+        bc = _causal_conv(br, p["conv_b"], left=left_b)
+        cc = _causal_conv(cr, p["conv_c"], left=left_c)
         xs = xc.reshape(Bsz, S, H, P)
         Bm = bc.reshape(Bsz, S, G, N)
         Cm = cc.reshape(Bsz, S, G, N)
+        if new_lens is not None:
+            # padded tail rows: dt=0 => decay 1, zero input — state untouched
+            valid = jnp.arange(S)[None, :] < new_lens[:, None]     # (B,S)
+            dt = jnp.where(valid[:, :, None], dt, 0.0)
         a = dt * A[None, None, :]                                  # (B,S,H)
         h0 = cache["ssm"] if cache is not None else None
         if impl == "pallas":
@@ -213,12 +253,14 @@ def mamba2(p: Params, cfg: Mamba2Config, x: Array, *,
         y = y + p["D"][None, None, :, None] * xs.astype(jnp.float32)
         y = y.reshape(Bsz, S, cfg.d_inner)
         if cache is not None:
-            # prefill -> decode handoff: keep last (d_conv-1) raw conv inputs
-            K = cfg.d_conv - 1
+            # prefill -> decode handoff: the next conv buffer is the last
+            # (d_conv-1) *valid* raw inputs of buffer+chunk — prepending the
+            # old buffer left-pads prompts shorter than d_conv-1 with the
+            # carried (initially zero) context instead of under-filling
             new_cache = {
-                "conv_x": xr[:, -K:, :].astype(cache["conv_x"].dtype),
-                "conv_b": br[:, -K:, :].astype(cache["conv_b"].dtype),
-                "conv_c": cr[:, -K:, :].astype(cache["conv_c"].dtype),
+                "conv_x": _conv_tail(left_x, xr, new_lens),
+                "conv_b": _conv_tail(left_b, br, new_lens),
+                "conv_c": _conv_tail(left_c, cr, new_lens),
                 "ssm": h_final.astype(cache["ssm"].dtype),
             }
         else:
@@ -227,3 +269,29 @@ def mamba2(p: Params, cfg: Mamba2Config, x: Array, *,
     y = y.astype(x.dtype) * jax.nn.silu(z)
     y = L.rmsnorm(p["norm"], y)
     return L.dense(p["out_proj"], y), new_cache
+
+
+def mamba2_slot(p: Params, cfg: Mamba2Config, x: Array, *,
+                pool: Params, slot_ids: Array,
+                new_lens: Optional[Array] = None,
+                impl: str = "xla") -> tuple[Array, Params]:
+    """Serving path over a *slot-indexed state pool* (continuous batching).
+
+    pool: the mamba2 cache tree with a leading (slots+1) row axis shared by
+    all in-flight requests — row i holds engine slot i's recurrent state and
+    the last row is the reserved null slot (the slot-state analogue of the
+    paged-KV null block).  ``slot_ids`` (B,) maps each batch row to its pool
+    row; inactive batch rows point at the null slot, so their garbage
+    updates scatter into scratch that no live request ever reads.
+
+    Gather rows -> run the exact wave-path recurrence/chunked scan on them
+    (decode when S==1 and new_lens is None, chunk-prefill otherwise, with
+    the SSM state carried as h0 across chunks) -> scatter updated rows back.
+    """
+    rows = jax.tree.map(lambda t: t[slot_ids], pool)
+    decode = x.shape[1] == 1 and new_lens is None
+    y, new_rows = mamba2(p, cfg, x, cache=rows,
+                         new_lens=None if decode else new_lens, impl=impl)
+    new_pool = jax.tree.map(
+        lambda t, n: t.at[slot_ids].set(n.astype(t.dtype)), pool, new_rows)
+    return y, new_pool

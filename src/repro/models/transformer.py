@@ -47,7 +47,8 @@ def sinusoidal_at(positions: Array, d_model: int) -> Array:
     angle = pos / jnp.power(10000.0, dim / d_model)
     pe = jnp.zeros((positions.shape[0], d_model))
     pe = pe.at[:, 0::2].set(jnp.sin(angle))
-    pe = pe.at[:, 1::2].set(jnp.cos(angle))
+    # odd d_model: only floor(d/2) cos columns exist, angle has ceil(d/2)
+    pe = pe.at[:, 1::2].set(jnp.cos(angle[:, : d_model // 2]))
     return pe
 
 
@@ -116,23 +117,84 @@ def init_cache(arch: ArchConfig, batch: int, max_len: int,
 
 
 def init_paged_cache(arch: ArchConfig, num_blocks: int, block_size: int,
-                     dtype=jnp.bfloat16) -> list:
-    """Per-segment stacked *paged* KV block pools (leading repeat axis).
+                     dtype=jnp.bfloat16, *, slots: int = 0) -> list:
+    """Per-segment stacked serving cache pools (leading repeat axis).
 
-    Unlike init_cache there is no batch axis: the pool is shared by every
-    in-flight request and indexed through per-request block tables (see
-    layers.paged_attention / serving/paged_cache.py)."""
+    Two state classes, side by side (serving/cache_manager.py is the host
+    side of both):
+      * attn-family blocks get *paged KV block pools* — no batch axis; the
+        pool is shared by every in-flight request and indexed through
+        per-request block tables (layers.paged_attention);
+      * mamba2 / cross_attn blocks get *slot-indexed state pools* — leading
+        axis ``slots + 1`` (O(1)-per-request state: one row per engine slot
+        plus a reserved null row for inactive batch rows).  ``slots`` must
+        be > 0 when the pattern contains such blocks."""
     caches = []
     for seg in arch.pattern:
         def one(_):
             return {f"b{i}": B.init_paged_block_cache(kind, arch, num_blocks,
-                                                      block_size, dtype)
+                                                      block_size, dtype,
+                                                      slots=slots)
                     for i, kind in enumerate(seg.blocks)}
         stacked = jax.tree.map(
             lambda *xs: jnp.stack(xs), *[one(r) for r in range(seg.repeat)]) \
             if seg.repeat > 1 else jax.tree.map(lambda x: x[None], one(0))
         caches.append(stacked)
     return caches
+
+
+def admit_slot(params: Params, arch: ArchConfig, pools: list, slot_id,
+               frontend: Optional[Array] = None) -> list:
+    """Reset one engine slot's rows across every slot-state pool (paged KV
+    block pools pass through untouched — block reuse is handled by the
+    allocator instead).
+
+    mamba2 rows are zeroed (fresh recurrent state for the admitted request;
+    recompute-style preemption re-admits through here, so the re-prefill
+    starts from a clean h0).  cross_attn rows are zeroed, or — when the
+    admitted request carries ``frontend`` patch embeddings (1, T, d_model) —
+    filled with the cross K/V projections computed *once* here, never again
+    per step (the wave Server recomputes nothing either: it serves zero
+    cross K/V, which the zeroed path reproduces exactly)."""
+    cdt = _compute_dtype(arch)
+    out = []
+    for si, seg in enumerate(arch.pattern):
+        segp = params["segments"][si]
+        d = {}
+        for bi, kind in enumerate(seg.blocks):
+            key = f"b{bi}"
+            pool = pools[si][key]
+            if kind == "mamba2":
+                d[key] = jax.tree.map(lambda t: t.at[:, slot_id].set(0.0),
+                                      pool)
+            elif kind == "cross_attn":
+                if frontend is None:
+                    d[key] = jax.tree.map(lambda t: t.at[:, slot_id].set(0.0),
+                                          pool)
+                else:
+                    cfg = B.attn_cfg_for(arch, causal=False, gated=True,
+                                         use_rope=False)
+                    f = frontend[0].astype(cdt)              # (T, D)
+
+                    def kv_of(pl, cfg=cfg, f=f):
+                        k = L.dense(pl["wk"], f).reshape(
+                            -1, cfg.n_kv_heads, cfg.head_dim)
+                        v = L.dense(pl["wv"], f).reshape(
+                            -1, cfg.n_kv_heads, cfg.head_dim)
+                        if cfg.qk_norm:
+                            k = L.rmsnorm(pl["k_norm"], k)
+                        return k, v
+
+                    k, v = jax.vmap(kv_of)(segp[key]["attn"])  # (repeat,T,..)
+                    d[key] = {
+                        "k": pool["k"].at[:, slot_id].set(
+                            k.astype(pool["k"].dtype)),
+                        "v": pool["v"].at[:, slot_id].set(
+                            v.astype(pool["v"].dtype))}
+            else:
+                d[key] = pool
+        out.append(d)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -157,7 +219,8 @@ def _constrain(x, act_sharding):
 
 def _apply_segment(seg_params, blocks, arch, x, *, seg_cache=None, x0=None,
                    cross_input=None, shared=None, positions=None,
-                   block_tables=None, new_lens=None, impl="xla",
+                   block_tables=None, new_lens=None, slot_ids=None,
+                   impl="xla",
                    unroll: int = 1, remat: str = "none", act_sharding=None):
     """Scan the segment body over its repeat axis.  ``remat`` applies
     per-layer activation checkpointing inside the scan (the standard
@@ -175,7 +238,8 @@ def _apply_segment(seg_params, blocks, arch, x, *, seg_cache=None, x0=None,
             x, nc, a = B.apply_block(
                 p_stack[bi], kind, arch, x, x0=x0, cross_input=cross_input,
                 shared=shared, cache=c, positions=positions,
-                block_tables=block_tables, new_lens=new_lens, impl=impl)
+                block_tables=block_tables, new_lens=new_lens,
+                slot_ids=slot_ids, impl=impl)
             if has_cache:
                 new_caches[bi] = nc
             aux = aux + a
@@ -198,6 +262,7 @@ def lm_apply(params: Params, arch: ArchConfig, tokens: Optional[Array] = None, *
              positions: Optional[Array] = None,
              block_tables: Optional[Array] = None,
              new_lens: Optional[Array] = None,
+             slot_ids: Optional[Array] = None,
              impl: str = "xla",
              remat: str = "none",
              act_sharding=None,
@@ -213,6 +278,10 @@ def lm_apply(params: Params, arch: ArchConfig, tokens: Optional[Array] = None, *
        pools (init_paged_cache); requires per-sequence ``positions`` (B,).
        ``new_lens`` (B,) marks token rows past it as padding (fixed-shape
        prompt chunks; see layers.paged_attention).
+    slot_ids: (B,) int32 — pool rows for the slot-indexed state pools
+       (mamba2 state, cross-attn K/V); inactive batch rows point at the
+       reserved null row (= slots).  Required alongside block_tables when
+       the pattern contains slot-state blocks.
     """
     cdt = _compute_dtype(arch)
     aux_total = B.ZERO
@@ -252,8 +321,8 @@ def lm_apply(params: Params, arch: ArchConfig, tokens: Optional[Array] = None, *
             params["segments"][si], seg.blocks, arch, x,
             seg_cache=seg_cache, x0=x0, cross_input=cross_input,
             shared=params.get("shared"), positions=positions,
-            block_tables=block_tables, new_lens=new_lens, impl=impl,
-            remat=remat, act_sharding=act_sharding)
+            block_tables=block_tables, new_lens=new_lens, slot_ids=slot_ids,
+            impl=impl, remat=remat, act_sharding=act_sharding)
         aux_total = aux_total + aux
         new_caches.append(nc)
 

@@ -5,13 +5,15 @@ length, one batched prefill, then lock-step decode until every request in
 the wave finished (early finishers are masked).  Wave scheduling keeps the
 shared per-layer cache position scalar correct.
 
-True continuous batching (per-slot positions, paged KV cache, chunked
-prefill, admission scheduling) lives in ``repro/serving/`` —
+True continuous batching (per-slot positions, paged KV cache + slot-state
+pools, chunked prefill, admission scheduling) lives in ``repro/serving/`` —
 ContinuousBatchingEngine is greedy-parity-tested against this Server and is
-the production path for attention-only architectures.  This wave Server
-remains as the comparison baseline (benchmarks/serve_bench.py) and as the
-serving path for caches that are not length-indexed (SSM states,
-cross-attention K/V).
+the production path for attention-only, hybrid attn+SSM and cross-attention
+architectures (SSM state and cross K/V ride the slot-indexed pools, see
+serving/cache_manager.py).  This wave Server remains as the comparison
+baseline (benchmarks/serve_bench.py) and as the serving path for the
+still-excluded archs: zamba2's weight-shared block and whisper's
+encoder-decoder.
 
 The ASA plan supplies param/cache shardings (decode picks MP — KV cache
 time-sharded over `model`; see core/sharding.py).

@@ -118,22 +118,26 @@ def make_decode_step(arch: ArchConfig, *, impl: str = "xla",
 
 
 # --- paged steps (continuous-batching engine, repro/serving/) --------------
-# Both take the shared block-pool cache plus per-sequence position vectors
-# (B,) and block tables (B, max_blocks); see layers.paged_attention.
+# All take the shared serving cache (attn block pools + slot-state pools,
+# see transformer.init_paged_cache) plus per-sequence position vectors (B,),
+# block tables (B, max_blocks) and slot ids (B,); see layers.paged_attention
+# and mamba2.mamba2_slot.
 
 def make_paged_prefill_step(arch: ArchConfig, *, impl: str = "xla",
                             act_sharding=None):
     """-> prefill(params, cache, tokens (B,C), positions, block_tables,
-    new_lens) -> (last_valid_logits (B,V), cache).  Called once per prompt
-    *chunk* — the engine interleaves these with decode steps instead of
-    stalling a wave.  ``new_lens`` (B,) is the real token count per row; the
-    chunk is padded to a fixed C so the step traces once, and the returned
-    logits are taken at row new_lens-1 (the last real token)."""
+    new_lens, slot_ids) -> (last_valid_logits (B,V), cache).  Called once
+    per prompt *chunk* — the engine interleaves these with decode steps
+    instead of stalling a wave.  ``new_lens`` (B,) is the real token count
+    per row; the chunk is padded to a fixed C so the step traces once, and
+    the returned logits are taken at row new_lens-1 (the last real token).
+    ``slot_ids`` (B,) maps rows to slot-state pool rows (SSM state carried
+    as h0 across chunks; cross K/V read-only)."""
     def paged_prefill_step(params, cache, tokens, positions, block_tables,
-                           new_lens):
+                           new_lens, slot_ids):
         out = T.lm_apply(params, arch, tokens, cache=cache,
                          positions=positions, block_tables=block_tables,
-                         new_lens=new_lens, impl=impl,
+                         new_lens=new_lens, slot_ids=slot_ids, impl=impl,
                          act_sharding=act_sharding)
         last = jnp.take_along_axis(
             out.logits, (new_lens - 1)[:, None, None], axis=1)
@@ -143,13 +147,26 @@ def make_paged_prefill_step(arch: ArchConfig, *, impl: str = "xla",
 
 def make_paged_decode_step(arch: ArchConfig, *, impl: str = "xla",
                            act_sharding=None):
-    """-> decode(params, cache, tokens (B,1), positions, block_tables)
-    -> (logits (B,V), cache).  Every batch row advances at its *own*
-    position — slots holding idle/prefilling requests point their block
-    tables at the null block and are masked by the caller."""
-    def paged_decode_step(params, cache, tokens, positions, block_tables):
+    """-> decode(params, cache, tokens (B,1), positions, block_tables,
+    slot_ids) -> (logits (B,V), cache).  Every batch row advances at its
+    *own* position — slots holding idle/prefilling requests point their
+    block tables at the null block, their slot_ids at the null slot row,
+    and are masked by the caller."""
+    def paged_decode_step(params, cache, tokens, positions, block_tables,
+                          slot_ids):
         out = T.lm_apply(params, arch, tokens, cache=cache,
                          positions=positions, block_tables=block_tables,
-                         impl=impl, act_sharding=act_sharding)
+                         slot_ids=slot_ids, impl=impl,
+                         act_sharding=act_sharding)
         return out.logits[:, -1], out.cache
     return paged_decode_step
+
+
+def make_slot_admit_step(arch: ArchConfig):
+    """-> admit(params, cache, slot_id[, frontend]) -> cache.  Resets one
+    engine slot's rows in every slot-state pool on admission: mamba2 state
+    zeroed, cross-attn K/V zeroed or computed once from the request's
+    ``frontend`` embeddings (1, T, d_model).  No-op for attn block pools."""
+    def slot_admit_step(params, cache, slot_id, frontend=None):
+        return T.admit_slot(params, arch, cache, slot_id, frontend=frontend)
+    return slot_admit_step

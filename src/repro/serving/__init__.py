@@ -1,26 +1,36 @@
 """Continuous-batching serving subsystem.
 
 Layers (bottom up):
-  paged_cache.py  block-pool KV cache: free-list allocator + per-request
-                  block tables over the device pools from
-                  models/transformer.init_paged_cache, laid out with the
-                  ASA plan's paged_cache_specs sharding.
-  scheduler.py    admission scheduler: FCFS within priority classes,
-                  max-tokens-in-flight budgeting, preemption victim choice.
-  metrics.py      per-request TTFT/TPOT + queue depth / slot occupancy /
-                  tokens-per-second counters, emitted as JSON.
-  engine.py       the continuous-batching engine: per-slot decode positions,
-                  admission into freed slots every step, chunked prefill
-                  interleaved with decode.
+  paged_cache.py    block-pool KV cache: free-list allocator + per-request
+                    block tables over the device pools from
+                    models/transformer.init_paged_cache.
+  cache_manager.py  the unified cache manager: the paged block pools plus
+                    slot-indexed state pools (mamba2 conv/SSM state,
+                    cross-attention K/V — one row per engine slot + a
+                    reserved null row), behind one interface and one
+                    device pytree laid out with the ASA plan's
+                    paged_cache_specs sharding.
+  scheduler.py      admission scheduler: FCFS within priority classes,
+                    max-tokens-in-flight budgeting, preemption victim choice.
+  metrics.py        per-request TTFT/TPOT + queue depth / slot occupancy /
+                    tokens-per-second counters, emitted as JSON.
+  engine.py         the continuous-batching engine: per-slot decode
+                    positions, admission into freed slots every step,
+                    chunked prefill interleaved with decode; serves
+                    attention-only, hybrid attn+SSM and cross-attention
+                    architectures.
 
 The wave-synchronized Server (runtime/server.py) remains as the comparison
-baseline and as the path for architectures whose caches are not
-length-indexed (SSM / cross-attention states).
+baseline and as the path for the still-excluded architectures (zamba2's
+weight-shared block, whisper's encoder-decoder).
 """
+from repro.serving.cache_manager import (PAGEABLE_KINDS, SLOT_STATE_KINDS,
+                                         UnifiedCacheManager)
 from repro.serving.engine import ContinuousBatchingEngine, Request
 from repro.serving.metrics import ServingMetrics
 from repro.serving.paged_cache import BlockAllocator, PagedKVCache
 from repro.serving.scheduler import RequestScheduler
 
 __all__ = ["ContinuousBatchingEngine", "Request", "ServingMetrics",
-           "BlockAllocator", "PagedKVCache", "RequestScheduler"]
+           "BlockAllocator", "PagedKVCache", "UnifiedCacheManager",
+           "RequestScheduler", "PAGEABLE_KINDS", "SLOT_STATE_KINDS"]

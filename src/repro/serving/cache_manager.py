@@ -1,0 +1,104 @@
+"""Unified serving cache manager: paged KV block pools + slot-state pools.
+
+The continuous-batching engine juggles two classes of per-request state,
+and this module is the single host-side owner of both:
+
+  * **length-indexed** — attention KV grows one entry per token.  It lives
+    in fixed-size physical blocks (paged_cache.py: free-list allocator +
+    per-request block tables over the pools from
+    models/transformer.init_paged_cache).  Block 0 is the reserved null
+    block for idle slots / padded table tails / overrun writes.
+
+  * **slot-indexed** — mamba2 ``conv_x/conv_b/conv_c/ssm`` state and
+    cross-attention K/V are O(1) per request regardless of generated
+    length.  They live in pools with one row per engine slot plus a
+    trailing reserved **null slot** row (the slot-state analogue of the
+    null block): inactive batch rows in a fixed-shape decode step gather
+    and scatter against the null row, so their garbage never touches a
+    live request's state.  Rows are reset on admission (runtime/steps.
+    make_slot_admit_step — mamba2 zeroed, cross K/V computed once from the
+    request's frontend embeddings or zeroed), the SSM state is carried as
+    ``h0`` across prefill chunks, and recompute-style preemption needs no
+    extra handling: re-admission re-zeroes the row and the re-prefill
+    replays prompt + generated tokens through it.
+
+Both classes share one device pytree (and one SchedulePlan
+paged_cache_specs sharding tree — SSM head axis over `model`, kv-head axis
+over `model`), so the jitted paged steps thread a single donated cache.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.serving.paged_cache import PagedCacheConfig, PagedKVCache
+
+PAGEABLE_KINDS = {"attn", "moe_attn"}          # length-indexed, block-paged
+SLOT_STATE_KINDS = {"mamba2", "cross_attn"}    # O(1) state, slot-indexed
+SERVABLE_KINDS = PAGEABLE_KINDS | SLOT_STATE_KINDS
+
+
+def check_servable(arch: ArchConfig) -> None:
+    """Raise with a precise reason when the continuous engine cannot serve
+    this architecture (the wave Server in runtime/server.py still can)."""
+    kinds = {k for seg in arch.pattern for k in seg.blocks}
+    unsupported = kinds - SERVABLE_KINDS
+    if unsupported:
+        detail = {
+            "shared_attn": "zamba2's shared transformer block mixes every "
+                           "slot's hidden state through one weight-shared "
+                           "cache",
+            "wdec": "whisper's encoder-decoder needs the fixed-length "
+                    "encoder pass per request",
+        }
+        why = "; ".join(detail.get(k, f"{k!r} has no paged/slot-state path")
+                        for k in sorted(unsupported))
+        raise ValueError(
+            f"continuous engine cannot serve {arch.name}: "
+            f"{sorted(unsupported)} excluded ({why}) — use "
+            f"runtime.server.Server (wave baseline)")
+    if arch.encoder is not None:
+        raise ValueError(
+            f"continuous engine cannot serve {arch.name}: encoder-decoder "
+            f"architectures need a per-request encoder pass — use "
+            f"runtime.server.Server (wave baseline)")
+
+
+class UnifiedCacheManager(PagedKVCache):
+    """PagedKVCache plus slot-state row bookkeeping.
+
+    The block side (reserve / release / can_fit / table_array) is inherited
+    unchanged.  The slot side is deliberately thin: engine slot i *is* pool
+    row i, so admission/finish need no allocation — only the null-row
+    mapping for inactive batch rows, provided by :meth:`slot_ids_array`.
+    """
+
+    def __init__(self, arch: ArchConfig, cfg: PagedCacheConfig, *,
+                 dtype=None, mesh=None, specs=None):
+        check_servable(arch)
+        kinds = {k for seg in arch.pattern for k in seg.blocks}
+        self.slot_state_kinds = sorted(kinds & SLOT_STATE_KINDS)
+        if self.slot_state_kinds and cfg.slots <= 0:
+            raise ValueError(f"{arch.name} carries slot-state caches "
+                             f"({self.slot_state_kinds}) — cfg.slots must "
+                             f"be the engine slot count")
+        kw = {} if dtype is None else {"dtype": dtype}
+        super().__init__(arch, cfg, mesh=mesh, specs=specs, **kw)
+
+    @property
+    def has_slot_state(self) -> bool:
+        return bool(self.slot_state_kinds)
+
+    @property
+    def null_slot(self) -> int:
+        """Reserved scratch row index (= cfg.slots): inactive batch rows
+        gather/scatter here, mirroring the null block."""
+        return self.cfg.slots
+
+    def slot_ids_array(self, rows: list[Optional[int]]) -> np.ndarray:
+        """(B,) int32 pool-row vector: the given slot row (``_Slot.idx``)
+        for active batch rows, the null slot row for None (inactive)."""
+        return np.asarray([self.null_slot if r is None else r
+                           for r in rows], np.int32)

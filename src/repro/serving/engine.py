@@ -1,27 +1,35 @@
-"""Continuous-batching engine: per-slot decode positions over a paged KV
-cache, admission into freed slots every step, chunked prefill interleaved
-with decode.
+"""Continuous-batching engine: per-slot decode positions over a unified
+serving cache (paged KV block pools + slot-indexed state pools), admission
+into freed slots every step, chunked prefill interleaved with decode.
 
 Contrast with runtime/server.py (the wave baseline, kept for comparison and
-for SSM/cross-attn caches): a wave stalls all slots until the slowest
-request finishes and replays a full-cache prefill per wave.  Here each batch
-row carries its own position vector and block table, so a finished request's
+for the remaining excluded archs — zamba2's shared block, whisper's
+enc-dec): a wave stalls all slots until the slowest request finishes and
+replays a full-cache prefill per wave.  Here each batch row carries its own
+position vector, block table and slot-state row, so a finished request's
 slot (and its cache blocks) are reused on the very next step, and a long
 prompt is prefilled ``prefill_chunk`` tokens at a time between decode steps
-instead of blocking them.
+instead of blocking them.  Hybrid attn+SSM and cross-attention archs are
+served through the slot-state pools (serving/cache_manager.py): mamba2
+state rides row `slot`, carried as h0 across prefill chunks; cross K/V is
+written once at admission.
 
 Engine step = admit -> one prefill chunk -> one decode step:
   1. every free slot pulls from the RequestScheduler (priority/FCFS +
-     max-tokens budget) if its prompt's blocks fit the pool;
+     max-tokens budget) if its prompt's blocks fit the pool; admission
+     resets the slot's state-pool rows (make_slot_admit_step);
   2. the oldest prefilling request advances one chunk; finishing the prompt
      samples its first token (TTFT);
   3. all decoding slots advance one token.  A slot needing a new block under
      cache pressure preempts the longest-running request (recompute-style:
-     blocks freed, request requeued with prompt+generated as its new prefill).
+     blocks freed, request requeued with prompt+generated as its new prefill
+     — slot-state needs no checkpoint: re-admission re-zeroes the row).
 
 Greedy decode is token-for-token identical to the wave Server: the paged
-attention path masks exactly the same prefix (see layers._paged_sdpa), which
-tests/test_serving.py asserts.
+attention path masks exactly the same prefix (see layers._paged_sdpa) and
+the slot-state path runs the same recurrence on gathered rows, which
+tests/test_serving.py asserts for attention-only, hybrid and cross-attn
+configs.
 """
 from __future__ import annotations
 
@@ -38,12 +46,10 @@ from repro.configs.base import ArchConfig, ShapeSpec
 from repro.core.asa import AdaptiveScheduler
 from repro.launch.mesh import mesh_shape_of
 from repro.runtime import steps as ST
+from repro.serving.cache_manager import UnifiedCacheManager, check_servable
 from repro.serving.metrics import ServingMetrics
-from repro.serving.paged_cache import (PagedCacheConfig, PagedKVCache,
-                                       blocks_for)
+from repro.serving.paged_cache import PagedCacheConfig, blocks_for
 from repro.serving.scheduler import RequestScheduler
-
-PAGEABLE_KINDS = {"attn", "moe_attn"}
 
 
 @dataclasses.dataclass
@@ -52,6 +58,7 @@ class Request:
     prompt: np.ndarray               # (S,) int32
     max_new_tokens: int = 16
     priority: int = 0                # lower = more urgent
+    frontend: Optional[np.ndarray] = None   # (1, T, d_model) patch embeddings
     out_tokens: list = dataclasses.field(default_factory=list)
     done: bool = False
     _sched_seq: Optional[int] = None   # set by RequestScheduler (FCFS order)
@@ -66,6 +73,7 @@ class Request:
 
 @dataclasses.dataclass
 class _Slot:
+    idx: int = 0                     # engine slot index == state-pool row
     req: Optional[Request] = None
     state: str = "idle"              # idle | prefill | decode
     pos: int = 0                     # tokens currently resident in the cache
@@ -84,11 +92,7 @@ class ContinuousBatchingEngine:
                  scheduler: Optional[RequestScheduler] = None,
                  asa: Optional[AdaptiveScheduler] = None,
                  metrics: Optional[ServingMetrics] = None):
-        kinds = {k for seg in arch.pattern for k in seg.blocks}
-        if not kinds <= PAGEABLE_KINDS or arch.encoder or arch.frontend:
-            raise ValueError(
-                f"continuous engine pages attention KV only; {arch.name} has "
-                f"{sorted(kinds - PAGEABLE_KINDS)} — use runtime.server.Server")
+        check_servable(arch)           # precise error for excluded archs
         self.arch, self.mesh = arch, mesh
         self.max_len, self.prefill_chunk = max_len, prefill_chunk
         max_blocks_per_seq = blocks_for(max_len, block_size)
@@ -98,8 +102,9 @@ class ContinuousBatchingEngine:
         sched = asa or AdaptiveScheduler(faithful=False)
         self.plan = sched.plan(arch, shape, mesh_shape_of(mesh))
         cdtype = jnp.float32 if arch.dtype == "float32" else jnp.bfloat16
-        self.cache = PagedKVCache(
-            arch, PagedCacheConfig(block_size, num_blocks, max_blocks_per_seq),
+        self.cache = UnifiedCacheManager(
+            arch, PagedCacheConfig(block_size, num_blocks, max_blocks_per_seq,
+                                   slots=slots),
             dtype=cdtype, mesh=mesh, specs=self.plan.paged_cache_specs())
         self.params = jax.device_put(
             params, jax.tree.map(lambda s: NamedSharding(mesh, s),
@@ -108,20 +113,30 @@ class ContinuousBatchingEngine:
                                 donate_argnums=(1,))
         self._decode = jax.jit(ST.make_paged_decode_step(arch),
                                donate_argnums=(1,))
+        self._admit_slot_state = jax.jit(
+            ST.make_slot_admit_step(arch), donate_argnums=(1,)) \
+            if self.cache.has_slot_state else None
         self.scheduler = scheduler or RequestScheduler()
         self.metrics = metrics or ServingMetrics()
-        self.slots = [_Slot() for _ in range(slots)]
+        self.slots = [_Slot(idx=i) for i in range(slots)]
         self.completed: list[Request] = []
+        self._active_ids: set[int] = set()   # queued or running request ids
 
     # ------------------------------------------------------------------
     def submit(self, req: Request, now: Optional[float] = None) -> None:
-        target = min(len(req.prompt) + req.max_new_tokens, self.max_len)
+        if len(req.prompt) == 0:
+            raise ValueError(f"request {req.id} has an empty prompt")
         if len(req.prompt) >= self.max_len:
             raise ValueError(f"prompt ({len(req.prompt)}) >= max_len")
-        if blocks_for(target, self.cache.cfg.block_size) \
+        if req.id in self._active_ids:
+            # block tables are keyed by request id — a duplicate would share
+            # (and corrupt) the live request's table
+            raise ValueError(f"request id {req.id} is already in flight")
+        if blocks_for(self._target_total(req), self.cache.cfg.block_size) \
                 > self.cache.cfg.num_blocks - 1:
             raise ValueError(f"request {req.id} can never fit the block pool")
-        self.scheduler.submit(req)
+        self.scheduler.submit(req)       # may raise (token budget) — only a
+        self._active_ids.add(req.id)     # queued request claims its id
         self.metrics.on_submit(req.id, now)
 
     def _target_total(self, req: Request) -> int:
@@ -139,6 +154,7 @@ class ContinuousBatchingEngine:
         self.cache.release(req.id)
         self.scheduler.on_finish(req)
         self.metrics.on_finish(req.id, len(req.out_tokens))
+        self._active_ids.discard(req.id)
         self.completed.append(req)
         slot.req, slot.state, slot.pos, slot.prefill_pos = None, "idle", 0, 0
 
@@ -170,6 +186,14 @@ class ContinuousBatchingEngine:
             assert ok, "can_fit passed but reserve failed"
             slot.req, slot.state = req, "prefill"
             slot.pos, slot.prefill_pos = 0, 0
+            if self._admit_slot_state is not None:
+                # reset this slot's state-pool rows (zero mamba2 state;
+                # cross K/V from the request's frontend, computed once)
+                args = (self.params, self.cache.pools,
+                        jnp.asarray(slot.idx, jnp.int32))
+                if req.frontend is not None:
+                    args += (jnp.asarray(req.frontend),)
+                self.cache.pools = self._admit_slot_state(*args)
 
     # -- phase 2: one chunk of prefill ---------------------------------
     def _prefill_chunk(self) -> None:
@@ -191,7 +215,8 @@ class ContinuousBatchingEngine:
         logits, self.cache.pools = self._prefill(
             self.params, self.cache.pools, jnp.asarray(chunk[None, :]),
             jnp.asarray([slot.prefill_pos], jnp.int32), jnp.asarray(table),
-            jnp.asarray([n_new], jnp.int32))
+            jnp.asarray([n_new], jnp.int32),
+            jnp.asarray([slot.idx], jnp.int32))
         slot.prefill_pos += n_new
         slot.pos = slot.prefill_pos
         self.metrics.prefill_chunks += 1
@@ -234,9 +259,14 @@ class ContinuousBatchingEngine:
                 pos[i] = s.pos
                 rids[i] = s.req.id
         table = self.cache.table_array(rids)
+        # idle/prefilling rows scatter their slot-state into the null row;
+        # active rows use s.idx (NOT list position — admission/prefill
+        # reset/advance the pool row at idx, and the two may diverge)
+        sids = self.cache.slot_ids_array(
+            [s.idx if s.state == "decode" else None for s in self.slots])
         logits, self.cache.pools = self._decode(
             self.params, self.cache.pools, jnp.asarray(last),
-            jnp.asarray(pos), jnp.asarray(table))
+            jnp.asarray(pos), jnp.asarray(table), jnp.asarray(sids))
         nxt = self._sample(logits)
         self.metrics.decode_steps += 1
         for i, s in enumerate(self.slots):

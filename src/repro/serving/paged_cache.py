@@ -82,15 +82,21 @@ class PagedCacheConfig:
     block_size: int
     num_blocks: int            # physical, including the reserved null block
     max_blocks_per_seq: int    # block-table width (= ceil(max_len / bs))
+    slots: int = 0             # slot-state pool rows (0: attn-only arch)
 
 
 class PagedKVCache:
-    """Device block pools + allocator + per-request block tables."""
+    """Device block pools + allocator + per-request block tables.
+
+    With ``cfg.slots`` > 0 the device pytree also carries slot-indexed state
+    pools for O(1)-per-request caches; serving/cache_manager.py layers the
+    slot-row bookkeeping on top of this class."""
 
     def __init__(self, arch: ArchConfig, cfg: PagedCacheConfig, *,
                  dtype=jnp.bfloat16, mesh=None, specs=None):
         self.arch, self.cfg = arch, cfg
-        pools = T.init_paged_cache(arch, cfg.num_blocks, cfg.block_size, dtype)
+        pools = T.init_paged_cache(arch, cfg.num_blocks, cfg.block_size,
+                                   dtype, slots=cfg.slots)
         if mesh is not None and specs is not None:
             ns = jax.tree.map(lambda s: NamedSharding(mesh, s), specs)
             pools = jax.device_put(pools, ns)

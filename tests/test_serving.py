@@ -1,20 +1,25 @@
 """Continuous-batching serving subsystem tests: paged-cache invariants,
 scheduler admission/preemption policy, and greedy-decode parity between the
-continuous engine and the wave Server baseline."""
+continuous engine and the wave Server baseline — for attention-only,
+hybrid attn+SSM and cross-attention architectures (the slot-state pools of
+serving/cache_manager.py)."""
 import json
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs.base import ArchConfig, Segment, ShapeSpec, SSMSpec
+from repro.configs.base import ArchConfig, EncoderSpec, Segment, ShapeSpec, \
+    SSMSpec
 from repro.core.asa import AdaptiveScheduler
 from repro.launch.mesh import make_host_mesh, mesh_shape_of
+from repro.models import layers as L
 from repro.models import transformer as T
 from repro.runtime.server import Request as WaveRequest, Server
 from repro.serving import (BlockAllocator, ContinuousBatchingEngine,
                            PagedKVCache, Request, RequestScheduler,
-                           ServingMetrics)
+                           ServingMetrics, UnifiedCacheManager)
 from repro.serving.paged_cache import NULL_BLOCK, PagedCacheConfig, blocks_for
 
 TINY = ArchConfig(name="tiny-serve", family="dense", n_layers=2, d_model=64,
@@ -27,6 +32,20 @@ TINY_SSM = ArchConfig(name="tiny-ssm", family="ssm", n_layers=2, d_model=64,
                       ssm=SSMSpec(d_state=16, head_dim=16, chunk=16),
                       pattern=(Segment(("mamba2",), 2),), dtype="float32",
                       param_dtype="float32")
+
+TINY_HYBRID = ArchConfig(name="tiny-hybrid", family="hybrid", n_layers=4,
+                         d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                         vocab=256,
+                         ssm=SSMSpec(d_state=16, head_dim=16, d_conv=4,
+                                     chunk=4),
+                         pattern=(Segment(("attn", "mamba2"), 2),),
+                         dtype="float32", param_dtype="float32")
+
+TINY_CROSS = ArchConfig(name="tiny-cross", family="vlm", n_layers=4,
+                        d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                        vocab=256, frontend="vision", n_img_tokens=8,
+                        pattern=(Segment(("attn", "cross_attn"), 2),),
+                        dtype="float32", param_dtype="float32")
 
 
 # ---------------------------------------------------------------------------
@@ -82,11 +101,36 @@ def test_blocks_for():
 
 def test_paged_cache_specs_match_pool_tree():
     mesh = make_host_mesh()
-    plan = AdaptiveScheduler(faithful=False).plan(
-        TINY, ShapeSpec("serve", 64, 2, "decode"), mesh_shape_of(mesh))
-    pools = T.init_paged_cache(TINY, 8, 4, np.float32)
-    specs = plan.paged_cache_specs()
-    assert jax.tree.structure(pools) == jax.tree.structure(specs)
+    for arch in (TINY, TINY_HYBRID, TINY_CROSS, TINY_SSM):
+        plan = AdaptiveScheduler(faithful=False).plan(
+            arch, ShapeSpec("serve", 64, 2, "decode"), mesh_shape_of(mesh))
+        pools = T.init_paged_cache(arch, 8, 4, np.float32, slots=2)
+        specs = plan.paged_cache_specs()
+        assert jax.tree.structure(pools) == jax.tree.structure(specs), \
+            arch.name
+
+
+def test_unified_cache_manager_slot_rows():
+    """Slot-state pools carry one row per engine slot plus the reserved
+    null row; inactive batch rows map to the null row."""
+    cfg = PagedCacheConfig(block_size=4, num_blocks=9, max_blocks_per_seq=4,
+                           slots=3)
+    mgr = UnifiedCacheManager(TINY_HYBRID, cfg, dtype=np.float32)
+    assert mgr.has_slot_state and mgr.slot_state_kinds == ["mamba2"]
+    assert mgr.null_slot == 3
+    ssm_pool = mgr.pools[0]["b1"]["ssm"]
+    assert ssm_pool.shape[1] == 4                  # slots + null row
+    # rows are _Slot.idx values (None -> null row), NOT list positions —
+    # the engine's slot list may be reordered relative to pool rows
+    assert (mgr.slot_ids_array([2, None, 0])
+            == np.array([2, 3, 0], np.int32)).all()
+    # block side inherited unchanged
+    assert mgr.reserve(0, 10) and mgr.allocator.num_used == 3
+    mgr.release(0)
+    assert mgr.allocator.num_used == 0
+    with pytest.raises(ValueError, match="slots"):
+        UnifiedCacheManager(TINY_HYBRID,
+                            PagedCacheConfig(4, 9, 4), dtype=np.float32)
 
 
 # ---------------------------------------------------------------------------
@@ -143,8 +187,8 @@ def test_scheduler_preemption_victim_and_requeue_order():
 # engine
 # ---------------------------------------------------------------------------
 
-def _wave_outputs(params, mesh, prompts, max_new):
-    srv = Server(TINY, params, mesh, slots=2, max_len=64)
+def _wave_outputs(params, mesh, prompts, max_new, arch=TINY):
+    srv = Server(arch, params, mesh, slots=2, max_len=64)
     for i, p in enumerate(prompts):
         srv.submit(WaveRequest(id=i, prompt=p.copy(), max_new_tokens=max_new))
     srv.run_until_drained()
@@ -256,11 +300,207 @@ def test_prefill_serves_oldest_request_first():
     assert eng.slots[0].prefill_pos == 0      # newer waits
 
 
-def test_engine_rejects_non_attention_arch():
+def test_hybrid_and_cross_parity_with_wave():
+    """Slot-state serving: hybrid attn+SSM and cross-attn configs decode
+    token-for-token like the wave Server, through chunked prefill (chunk <
+    prompt) and slot churn (more requests than slots)."""
+    mesh = make_host_mesh()
+    for arch in (TINY_HYBRID, TINY_CROSS):
+        params = T.init_lm(jax.random.PRNGKey(0), arch)
+        prompts = [np.arange(1, 9, dtype=np.int32) + i for i in range(4)]
+        wave = _wave_outputs(params, mesh, prompts, max_new=6, arch=arch)
+        eng = ContinuousBatchingEngine(arch, params, mesh, slots=2,
+                                       max_len=64, block_size=4,
+                                       prefill_chunk=4)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(id=i, prompt=p.copy(), max_new_tokens=6))
+        eng.run_until_drained()
+        assert {r.id: r.out_tokens for r in eng.completed} == wave, arch.name
+        assert eng.cache.allocator.num_used == 0
+
+
+def test_hybrid_parity_under_preemption():
+    """Forced preemption (tiny block pool) on the hybrid config: the
+    recompute-style resume must rebuild the SSM slot state exactly —
+    re-admission zeroes the row and the re-prefill replays prompt+generated
+    through the chunked scan with h0 carried."""
+    mesh = make_host_mesh()
+    params = T.init_lm(jax.random.PRNGKey(0), TINY_HYBRID)
+    prompts = [np.arange(1, 9, dtype=np.int32) + i for i in range(4)]
+    wave = _wave_outputs(params, mesh, prompts, max_new=8, arch=TINY_HYBRID)
+    eng = ContinuousBatchingEngine(TINY_HYBRID, params, mesh, slots=2,
+                                   max_len=64, block_size=4, num_blocks=8,
+                                   prefill_chunk=8)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(id=i, prompt=p.copy(), max_new_tokens=8))
+    eng.run_until_drained()
+    assert {r.id: r.out_tokens for r in eng.completed} == wave
+    assert eng.metrics.preemptions > 0
+    assert eng.cache.allocator.num_used == 0
+
+
+def test_pure_ssm_parity_with_wave():
+    """mamba2-only arch (no attention KV at all): served via slot-state
+    pools alone."""
     mesh = make_host_mesh()
     params = T.init_lm(jax.random.PRNGKey(0), TINY_SSM)
-    with pytest.raises(ValueError, match="wave|Server|attention"):
-        ContinuousBatchingEngine(TINY_SSM, params, mesh)
+    prompts = [np.arange(1, 9, dtype=np.int32) + i for i in range(3)]
+    wave = _wave_outputs(params, mesh, prompts, max_new=6, arch=TINY_SSM)
+    eng = ContinuousBatchingEngine(TINY_SSM, params, mesh, slots=2,
+                                   max_len=64, block_size=4, prefill_chunk=3)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(id=i, prompt=p.copy(), max_new_tokens=6))
+    eng.run_until_drained()
+    assert {r.id: r.out_tokens for r in eng.completed} == wave
+
+
+def test_cross_kv_computed_once_at_admission():
+    """A request carrying frontend embeddings gets its cross K/V projected
+    into its slot rows at admit time; with nonzero attention gates the
+    frontend changes the greedy output vs the text-only (zero cross-K/V)
+    serve."""
+    mesh = make_host_mesh()
+    params = T.init_lm(jax.random.PRNGKey(0), TINY_CROSS)
+    # llama-vision tanh gates init at 0 => open them so cross-attn matters
+    for si, seg in enumerate(TINY_CROSS.pattern):
+        blk = params["segments"][si]["b1"]
+        blk["attn"]["gate"] = jnp.ones_like(blk["attn"]["gate"])
+        blk["mlp_gate"] = jnp.ones_like(blk["mlp_gate"])
+    fe = np.asarray(20 * jax.random.normal(jax.random.PRNGKey(3), (1, 8, 64)),
+                    np.float32)
+    prompt = np.arange(1, 7, dtype=np.int32)
+
+    def serve(frontend):
+        eng = ContinuousBatchingEngine(TINY_CROSS, params, mesh, slots=2,
+                                       max_len=32, block_size=4,
+                                       prefill_chunk=4)
+        eng.submit(Request(id=0, prompt=prompt.copy(), max_new_tokens=4,
+                           frontend=frontend))
+        eng.run_until_drained()
+        return eng, eng.completed[0].out_tokens
+
+    eng, with_fe = serve(fe)
+    # slot 0's cross-K row equals the direct projection of the frontend
+    from repro.models import blocks as B
+    cfg = B.attn_cfg_for(TINY_CROSS, causal=False, gated=True,
+                         use_rope=False)
+    attn0 = jax.tree.map(lambda t: t[0], params["segments"][0]["b1"]["attn"])
+    k_ref = L.dense(attn0["wk"], jnp.asarray(fe[0])).reshape(
+        8, cfg.n_kv_heads, cfg.head_dim)
+    got = np.asarray(eng.cache.pools[0]["b1"]["k"][0, 0])
+    np.testing.assert_allclose(got, np.asarray(k_ref), rtol=1e-6)
+    _, text_only = serve(None)
+    assert with_fe != text_only
+
+
+def test_submit_rejects_duplicate_ids_and_empty_prompts():
+    """Regression: block tables are keyed by request id, so a duplicate
+    in-flight id silently shared (and corrupted) the live request's table;
+    an empty prompt crashed the prefill with a KeyError.  Both must be
+    rejected at submit; a finished id may be reused."""
+    mesh = make_host_mesh()
+    params = T.init_lm(jax.random.PRNGKey(0), TINY)
+    eng = ContinuousBatchingEngine(TINY, params, mesh, slots=2, max_len=64,
+                                   block_size=4, prefill_chunk=8)
+    eng.submit(Request(id=7, prompt=np.arange(1, 5, dtype=np.int32),
+                       max_new_tokens=2))
+    with pytest.raises(ValueError, match="already in flight"):
+        eng.submit(Request(id=7, prompt=np.arange(1, 5, dtype=np.int32),
+                           max_new_tokens=2))
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.submit(Request(id=8, prompt=np.array([], np.int32)))
+    eng.run_until_drained()
+    eng.submit(Request(id=7, prompt=np.arange(1, 5, dtype=np.int32),
+                       max_new_tokens=2))         # id free again after finish
+    eng.run_until_drained()
+    assert len(eng.completed) == 2
+
+
+def test_engine_rejects_excluded_archs_with_precise_error():
+    """zamba2's weight-shared block and whisper's enc-dec stay wave-only;
+    the error says why and points at the wave Server."""
+    mesh = make_host_mesh()
+    shared = ArchConfig(name="tiny-shared", family="hybrid", n_layers=2,
+                        d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
+                        vocab=256,
+                        ssm=SSMSpec(d_state=16, head_dim=16, chunk=16),
+                        pattern=(Segment(("shared_attn", "mamba2"), 1),),
+                        dtype="float32", param_dtype="float32")
+    with pytest.raises(ValueError, match="shared.*wave|wave.*shared"):
+        ContinuousBatchingEngine(shared, None, mesh)
+    encdec = ArchConfig(name="tiny-encdec", family="audio", n_layers=2,
+                        d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
+                        vocab=256, pattern=(Segment(("wdec",), 2),),
+                        encoder=EncoderSpec(n_layers=1, seq_len=8, d_ff=128),
+                        frontend="audio", dtype="float32",
+                        param_dtype="float32")
+    with pytest.raises(ValueError, match="wdec|encoder"):
+        ContinuousBatchingEngine(encdec, None, mesh)
+
+
+def test_short_prompt_mamba2_handoff():
+    """Regression: a prompt shorter than d_conv-1 used to under-fill the
+    conv buffer at the prefill->decode handoff (xr[:, -K:, :] yields < K
+    rows).  A 1-token prompt must decode, and greedily continuing from a
+    2-token prompt must reproduce the same stream (exact handoff state)."""
+    mesh = make_host_mesh()
+    params = T.init_lm(jax.random.PRNGKey(0), TINY_SSM)
+    srv = Server(TINY_SSM, params, mesh, slots=1, max_len=32)
+    srv.submit(WaveRequest(id=0, prompt=np.array([5], np.int32),
+                           max_new_tokens=6))
+    srv.run_until_drained()
+    first = srv.completed[0].out_tokens
+    assert len(first) == 6
+    srv2 = Server(TINY_SSM, params, mesh, slots=1, max_len=32)
+    srv2.submit(WaveRequest(id=0,
+                            prompt=np.array([5, first[0]], np.int32),
+                            max_new_tokens=5))
+    srv2.run_until_drained()
+    assert srv2.completed[0].out_tokens == first[1:]
+
+
+def test_paged_attention_overrun_diverts_to_null_block():
+    """Regression: a write past a request's block-table capacity used to be
+    clamped into its *last* block, corrupting live KV.  Overrun writes must
+    land in the null block and leave every live block (and prior-token
+    logits) bit-identical."""
+    cfg = L.AttnConfig(d_model=32, n_heads=2, n_kv_heads=2, head_dim=16)
+    p = L.init_attention(jax.random.PRNGKey(0), cfg, jnp.float32)
+    BS, NB = 4, 6
+    pool = L.init_paged_attention_cache(cfg, NB, BS, jnp.float32)
+    xa = jax.random.normal(jax.random.PRNGKey(1), (1, 8, 32))
+    ta = jnp.asarray([[1, 2]], jnp.int32)          # capacity: 8 tokens
+    _, pool = L.paged_attention(p, cfg, xa, cache=pool,
+                                positions=jnp.array([0]), block_tables=ta)
+    out1, pool1 = L.paged_attention(p, cfg, xa[:, -1:], cache=pool,
+                                    positions=jnp.array([7]),
+                                    block_tables=ta)
+    # another request writes OUT of table: position 9 -> logical block 2
+    xb = jax.random.normal(jax.random.PRNGKey(2), (1, 1, 32))
+    _, pool2 = L.paged_attention(p, cfg, xb, cache=pool1,
+                                 positions=jnp.array([9]),
+                                 block_tables=jnp.asarray([[3, 4]],
+                                                          jnp.int32))
+    perturbed = [b for b in range(NB)
+                 if not np.array_equal(np.asarray(pool1["k"][b]),
+                                       np.asarray(pool2["k"][b]))]
+    assert perturbed in ([], [0])                  # only the null block
+    out2, _ = L.paged_attention(p, cfg, xa[:, -1:], cache=pool2,
+                                positions=jnp.array([7]), block_tables=ta)
+    assert np.array_equal(np.asarray(out1), np.asarray(out2))
+
+
+def test_sinusoidal_odd_d_model():
+    """Regression: odd d_model used to raise a shape error (floor(d/2) cos
+    columns assigned ceil(d/2) values)."""
+    for d in (5, 7, 64):
+        pe = T.sinusoidal_at(jnp.arange(6), d)
+        assert pe.shape == (6, d)
+    # even path unchanged: interleaved sin/cos
+    pe = T.sinusoidal_at(jnp.arange(4), 6)
+    np.testing.assert_allclose(np.asarray(pe[:, 0]),
+                               np.sin(np.arange(4, dtype=np.float32)),
+                               rtol=1e-6)
 
 
 def test_metrics_json_report():
