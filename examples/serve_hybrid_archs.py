@@ -1,0 +1,67 @@
+"""Continuous serving for the formerly wave-only architectures.
+
+zamba2 (weight-shared attention block over a Mamba2 backbone) and whisper
+(encoder-decoder) were the last two configs stuck on the retired wave
+Server.  Both now run on ContinuousBatchingEngine:
+
+  * zamba2: the shared block's KV pages through a per-application block
+    pool (one pool row per application of the shared weights), the Mamba2
+    state rides the slot-state pools;
+  * whisper: each request may carry audio frame embeddings as its
+    ``frontend`` — the encoder runs ONCE at admission and every decoder
+    layer's cross K/V is written into the request's slot rows; text-only
+    requests decode against zero cross K/V, exactly like the old wave path.
+
+    PYTHONPATH=src python examples/serve_hybrid_archs.py
+"""
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+import numpy as np
+import jax
+
+from repro.configs import ARCHS, reduce_for_smoke
+from repro.launch.mesh import make_host_mesh
+from repro.models import transformer as T
+from repro.serving import ContinuousBatchingEngine, Request
+
+
+def serve(arch_name, mesh, *, frontend_for=None):
+    arch = reduce_for_smoke(ARCHS[arch_name])
+    params = T.init_lm(jax.random.PRNGKey(0), arch)
+    engine = ContinuousBatchingEngine(arch, params, mesh, slots=4,
+                                      max_len=128, block_size=16,
+                                      prefill_chunk=32)
+    rng = np.random.default_rng(0)
+    for i in range(8):
+        prompt_len = int(rng.integers(8, 48))
+        fe = None
+        if frontend_for is not None and i % 2 == 0:   # every other request
+            fe = rng.standard_normal(
+                (1, arch.encoder.seq_len, arch.d_model)).astype(np.float32)
+        engine.submit(Request(
+            id=i,
+            prompt=rng.integers(1, arch.vocab, size=prompt_len)
+            .astype(np.int32),
+            max_new_tokens=12, frontend=fe))
+    wall = engine.run_until_drained()
+    s = engine.metrics.summary()
+    print(f"[{arch.name}] {s['completed']} requests, {s['total_tokens']} "
+          f"tokens in {wall:.2f}s ({s['decode_steps']} decode steps, "
+          f"{s['prefill_chunks']} prefill chunks, occupancy "
+          f"{s['slot_occupancy_mean']*100:.0f}%)")
+    for r in engine.completed[:2]:
+        tag = " (audio frontend)" if r.frontend is not None else ""
+        print(f"  req {r.id}{tag}: {r.out_tokens}")
+
+
+def main():
+    mesh = make_host_mesh()
+    serve("zamba2-2.7b", mesh)
+    serve("whisper-medium", mesh, frontend_for="audio")
+
+
+if __name__ == "__main__":
+    main()

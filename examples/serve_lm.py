@@ -1,5 +1,7 @@
-"""Serving example: batched prefill + greedy decode through the Server
-runtime with an ASA-planned cache layout.
+"""Legacy serving API example: the wave-era ``runtime.server.Server``
+interface, now a deprecation shim — every token below is decoded by
+``repro.serving.ContinuousBatchingEngine`` (see examples/serve_continuous.py
+and examples/serve_hybrid_archs.py for the engine's own API).
 
     PYTHONPATH=src python examples/serve_lm.py
 """
@@ -34,7 +36,7 @@ def main():
     total_tokens = sum(len(r.out_tokens) for r in server.completed)
     print(f"completed {len(server.completed)} requests, "
           f"{total_tokens} tokens in {wall:.2f}s "
-          f"({server.waves} waves, {server.decode_steps} decode steps)")
+          f"({server.decode_steps} decode steps via the continuous engine)")
     for r in server.completed[:3]:
         print(f"  req {r.id}: {r.out_tokens}")
 

@@ -1,7 +1,12 @@
 """whisper-medium [audio] — encoder-decoder (arXiv:2212.04356).
 Conv frontend STUBBED: input_specs() supplies precomputed frame embeddings
 (B, 1500, d_model).  Assigned seq lens apply to the decoder; decode_32k =
-decoder self-attn KV 32k + cross-attn KV 1500.  long_500k skipped."""
+decoder self-attn KV 32k + cross-attn KV 1500.  long_500k skipped.
+
+Serving: ContinuousBatchingEngine pages the decoder self-attn KV and holds
+each request's encoder cross K/V in slot-state rows — the 1500-frame
+encoder runs ONCE at admission on the request's ``frontend`` embeddings
+(transformer.admit_slot), so decode steps never touch the encoder."""
 from repro.configs.base import ArchConfig, EncoderSpec, Segment
 
 ARCH = ArchConfig(

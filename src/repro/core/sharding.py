@@ -359,12 +359,19 @@ def paged_cache_specs(arch: ArchConfig, assignment: dict[str, Strategy],
 
     Slot-state pools have a leading (repeat, slots+1) prefix.  mamba2 state
     shards its SSM head axis over `model` (mirroring the training-plan cache
-    layout); cross-attn K/V shards its kv-head axis like the attn pools."""
+    layout); cross-attn K/V shards its kv-head axis like the attn pools.
+
+    zamba2's shared block pages a full-MHA pool per application (head axis
+    over `model` when n_heads divides); whisper's wdec carries a paged
+    self-attn pool plus a slot-state encoder-K/V pool; MLA's latent
+    (c_kv, k_rope) pools are replicated — the rank axis is contracted inside
+    the absorbed-score einsums and is tiny by design (the point of MLA)."""
     specs = []
     for si, seg in enumerate(arch.pattern):
         seg_spec = {}
         for bi, kind in enumerate(seg.blocks):
-            if kind not in ("attn", "moe_attn", "mamba2", "cross_attn"):
+            if kind not in ("attn", "moe_attn", "mamba2", "cross_attn",
+                            "mla", "mla_dense", "shared_attn", "wdec"):
                 raise ValueError(
                     f"paged/slot-state cache unsupported for block kind "
                     f"{kind!r}")
@@ -381,8 +388,22 @@ def paged_cache_specs(arch: ArchConfig, assignment: dict[str, Strategy],
                     "conv_c": P(None, None, None, None),
                     "ssm": P(None, None, h_ax, None, None)}
                 continue
+            if kind in ("mla", "mla_dense"):
+                seg_spec[f"b{bi}"] = {"c_kv": P(None, None, None, None),
+                                      "k_rope": P(None, None, None, None)}
+                continue
+            if kind == "shared_attn":
+                h_ax = "model" if (mp and _div(arch.n_heads, mesh.model)) \
+                    else None
+                pool = P(None, None, None, h_ax, None)
+                seg_spec[f"b{bi}"] = {"k": pool, "v": pool}
+                continue
             h_ax = "model" if (mp and _kv_heads_ok(arch, mesh)) else None
             pool = P(None, None, None, h_ax, None)
+            if kind == "wdec":
+                seg_spec[f"b{bi}"] = {"self": {"k": pool, "v": pool},
+                                      "cross": {"k": pool, "v": pool}}
+                continue
             seg_spec[f"b{bi}"] = {"k": pool, "v": pool}
         specs.append(seg_spec)
     return specs

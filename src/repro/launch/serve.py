@@ -1,18 +1,19 @@
 """Serving launcher CLI.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --smoke \
+    PYTHONPATH=src python -m repro.launch.serve --arch zamba2-2.7b --smoke \
         --engine continuous --requests 8 --prompt-len 16 --max-new 12
 
---engine wave        batched prefill + lock-step decode waves (baseline,
-                     runtime/server.py — only path for zamba2's shared
-                     block and whisper's encoder-decoder)
---engine continuous  continuous batching over the unified serving cache
-                     (paged KV block pools + slot-state pools for SSM /
-                     cross-attn state) with chunked prefill and per-slot
-                     positions (repro/serving/), emits a JSON metrics
-                     report (TTFT/TPOT/occupancy/tokens-per-sec).  Serves
-                     attention-only, hybrid attn+SSM (mamba2-780m) and
-                     cross-attention (llama-3.2-vision-90b) configs.
+--engine continuous  (default) continuous batching over the unified serving
+                     cache (paged KV / latent block pools + slot-state pools
+                     for SSM, cross-attn and encoder K/V state) with chunked
+                     prefill and per-slot positions (repro/serving/); emits
+                     a JSON metrics report (TTFT/TPOT/occupancy/tokens-per-
+                     sec).  Serves every config in the zoo — zamba2's
+                     weight-shared block, whisper's encoder-decoder and
+                     deepseek's MLA included.
+--engine wave        DEPRECATED: the wave decode path was deleted; this now
+                     exercises the runtime.server.Server compatibility shim,
+                     which delegates every token to the continuous engine.
 """
 from __future__ import annotations
 
@@ -31,7 +32,7 @@ def main():
     ap.add_argument("--arch", required=True, choices=sorted(ARCHS))
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--engine", choices=("wave", "continuous"),
-                    default="wave")
+                    default="continuous")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=12)
@@ -59,16 +60,19 @@ def main():
     if args.engine == "wave":
         from repro.runtime.server import Request, Server
         server = Server(arch, params, mesh, slots=args.slots,
-                        max_len=args.max_len)
+                        max_len=args.max_len,
+                        block_size=args.block_size,
+                        num_blocks=args.num_blocks,
+                        prefill_chunk=args.prefill_chunk)
         for i, p in enumerate(prompts):
             server.submit(Request(id=i, prompt=p,
                                   max_new_tokens=args.max_new))
         wall = server.run_until_drained()
         total = sum(len(r.out_tokens) for r in server.completed)
-        print(f"[wave] {len(server.completed)} requests, {total} tokens, "
-              f"{wall:.2f}s wall ({total / max(wall, 1e-9):.1f} tok/s "
-              f"host-wall), {server.waves} waves / "
-              f"{server.decode_steps} decode steps")
+        print(f"[wave-shim] {len(server.completed)} requests, {total} "
+              f"tokens, {wall:.2f}s wall ({total / max(wall, 1e-9):.1f} "
+              f"tok/s host-wall), {server.decode_steps} decode steps "
+              f"(continuous engine under the hood)")
         return
 
     from repro.serving import ContinuousBatchingEngine, Request

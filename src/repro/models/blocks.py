@@ -175,16 +175,28 @@ def init_paged_block_cache(kind: str, arch: ArchConfig, num_blocks: int,
                            slots: int = 0) -> Params:
     """Serving cache pool for one block (continuous-batching engine).
 
-    attn-family kinds get a physical KV *block pool* (length-indexed, paged
-    through block tables).  mamba2 / cross_attn state is O(1) per request —
-    not length-indexed, so paging does not apply; they get a *slot-indexed
-    state pool* instead: ``slots`` rows plus a trailing reserved null row
-    (see models/mamba2.mamba2_slot).  Other kinds (zamba2's shared block,
-    whisper's enc-dec) stay on the wave Server in runtime/server.py."""
+    attn-family kinds — including zamba2's weight-shared block (its pool is
+    stacked per *application* by init_paged_cache's repeat axis, so each of
+    the shared block's applications pages its own KV) and MLA's latent
+    (c_kv, k_rope) cache — get a physical *block pool* (length-indexed,
+    paged through block tables).  mamba2 / cross_attn state is O(1) per
+    request — not length-indexed, so paging does not apply; they get a
+    *slot-indexed state pool* instead: ``slots`` rows plus a trailing
+    reserved null row (see models/mamba2.mamba2_slot).  whisper's wdec
+    carries both classes: paged self-attn KV plus a slot-state pool holding
+    the per-request encoder cross K/V (written once at admission)."""
     if kind in ("attn", "moe_attn"):
         return L.init_paged_attention_cache(attn_cfg_for(arch), num_blocks,
                                             block_size, dtype)
-    if kind in ("mamba2", "cross_attn"):
+    if kind == "shared_attn":
+        cfg = attn_cfg_for(arch, d_model=2 * arch.d_model,
+                           n_heads=arch.n_heads)
+        return L.init_paged_attention_cache(cfg, num_blocks, block_size,
+                                            dtype)
+    if kind in ("mla", "mla_dense"):
+        return MLA.init_paged_mla_cache(mla_cfg_for(arch), num_blocks,
+                                        block_size, dtype)
+    if kind in ("mamba2", "cross_attn", "wdec"):
         if slots <= 0:
             raise ValueError(
                 f"slot-state pool for {kind!r} needs slots > 0 (one state "
@@ -192,11 +204,25 @@ def init_paged_block_cache(kind: str, arch: ArchConfig, num_blocks: int,
         if kind == "mamba2":
             # fp32 recurrent state, matching init_block_cache's wave path
             return M2.init_mamba2_cache(ssm_cfg_for(arch), slots + 1)
+        if kind == "wdec":
+            if arch.encoder is None:
+                raise ValueError(
+                    f"{arch.name}: wdec blocks need arch.encoder (its "
+                    f"seq_len sizes the per-slot cross-K/V pool)")
+            self_cfg = attn_cfg_for(arch, use_rope=False)
+            cross_cfg = attn_cfg_for(arch, causal=False, use_rope=False)
+            enc_len = arch.encoder.seq_len
+            shp = (slots + 1, enc_len, cross_cfg.n_kv_heads,
+                   cross_cfg.head_dim)
+            return {"self": L.init_paged_attention_cache(
+                        self_cfg, num_blocks, block_size, dtype),
+                    "cross": {"k": jnp.zeros(shp, dtype),
+                              "v": jnp.zeros(shp, dtype)}}
         cfg = attn_cfg_for(arch, causal=False, use_rope=False)
         shp = (slots + 1, arch.n_img_tokens, cfg.n_kv_heads, cfg.head_dim)
         return {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype)}
-    raise ValueError(f"paged/slot-state cache unsupported for block kind "
-                     f"{kind!r} — use runtime.server.Server")
+    raise ValueError(f"no paged/slot-state serving cache for block kind "
+                     f"{kind!r}")
 
 
 # ---------------------------------------------------------------------------
@@ -218,9 +244,10 @@ def apply_block(p: Params, kind: str, arch: ArchConfig, x: Array, *,
     pool path for mamba2 / cross_attn (see serving/cache_manager.py)."""
     aux = ZERO
     if (block_tables is not None or slot_ids is not None) and \
-            kind not in ("attn", "moe_attn", "mamba2", "cross_attn"):
+            kind not in ("attn", "moe_attn", "mamba2", "cross_attn",
+                         "mla", "mla_dense", "shared_attn", "wdec"):
         raise ValueError(f"continuous-batching serving unsupported for block "
-                         f"kind {kind!r} — use runtime.server.Server")
+                         f"kind {kind!r}")
     if kind in ("attn", "enc_attn", "moe_attn"):
         causal = kind != "enc_attn"
         cfg = attn_cfg_for(arch, causal=causal, use_rope=(kind != "enc_attn"))
@@ -237,9 +264,16 @@ def apply_block(p: Params, kind: str, arch: ArchConfig, x: Array, *,
         return x + h, new_cache, aux
 
     if kind in ("mla", "mla_dense"):
-        h, new_cache = MLA.mla_attention(p["attn"], mla_cfg_for(arch),
-                                         norm_apply(arch, p["norm1"], x),
-                                         cache=cache, positions=positions)
+        if block_tables is not None:
+            h, new_cache = MLA.mla_paged_attention(
+                p["attn"], mla_cfg_for(arch),
+                norm_apply(arch, p["norm1"], x), cache=cache,
+                positions=positions, block_tables=block_tables,
+                new_lens=new_lens)
+        else:
+            h, new_cache = MLA.mla_attention(p["attn"], mla_cfg_for(arch),
+                                             norm_apply(arch, p["norm1"], x),
+                                             cache=cache, positions=positions)
         x = x + h
         if kind == "mla":
             h, aux = MOE.moe(p["moe"], moe_cfg_for(arch),
@@ -287,11 +321,24 @@ def apply_block(p: Params, kind: str, arch: ArchConfig, x: Array, *,
         c_cross = cache["cross"] if cache is not None else None
         h, nc_self = L.attention(p["attn"], self_cfg,
                                  norm_apply(arch, p["norm1"], x),
-                                 cache=c_self, positions=positions, impl=impl)
+                                 cache=c_self, positions=positions,
+                                 block_tables=block_tables,
+                                 new_lens=new_lens, impl=impl)
         x = x + h
-        h, nc_cross = L.attention(p["xattn"], cross_cfg,
-                                  norm_apply(arch, p["norm2"], x),
-                                  kv_input=cross_input, cache=c_cross, impl=impl)
+        if slot_ids is not None:
+            # slot-state pool: per-request encoder cross K/V rows are
+            # read-only here (written once at admission —
+            # transformer.admit_slot runs the encoder)
+            rows = {"k": c_cross["k"][slot_ids], "v": c_cross["v"][slot_ids]}
+            h, _ = L.attention(p["xattn"], cross_cfg,
+                               norm_apply(arch, p["norm2"], x),
+                               cache=rows, impl=impl)
+            nc_cross = c_cross
+        else:
+            h, nc_cross = L.attention(p["xattn"], cross_cfg,
+                                      norm_apply(arch, p["norm2"], x),
+                                      kv_input=cross_input, cache=c_cross,
+                                      impl=impl)
         x = x + h
         h = L.mlp(p["mlp"], norm_apply(arch, p["norm3"], x), arch.act)
         new_cache = ({"self": nc_self, "cross": nc_cross}
@@ -303,9 +350,14 @@ def apply_block(p: Params, kind: str, arch: ArchConfig, x: Array, *,
         d2 = 2 * arch.d_model
         cfg = attn_cfg_for(arch, d_model=d2, n_heads=arch.n_heads)
         z = jnp.concatenate([x, x0], axis=-1)
+        # block_tables route to the per-application paged pool (the cache
+        # passed here is this application's slice of the repeat-stacked
+        # pool, so weight sharing never mixes two applications' KV)
         h, new_cache = L.attention(shared["attn"], cfg,
                                    norm_apply(arch, shared["norm1"], z),
-                                   cache=cache, positions=positions, impl=impl)
+                                   cache=cache, positions=positions,
+                                   block_tables=block_tables,
+                                   new_lens=new_lens, impl=impl)
         z = z + h
         z = z + L.mlp(shared["mlp"], norm_apply(arch, shared["norm2"], z), arch.act)
         return x + L.dense(p["app_proj"], z), new_cache, aux

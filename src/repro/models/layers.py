@@ -244,6 +244,32 @@ def _paged_sdpa(q: Array, k: Array, v: Array, *, scale: float,
     return jnp.einsum("bhst,bthd->bshd", probs, v)
 
 
+def paged_flat_indices(positions: Array, seq: int, block_tables: Array,
+                       block_size: int,
+                       new_lens: Optional[Array] = None
+                       ) -> tuple[Array, Array]:
+    """Logical->physical paging arithmetic shared by every paged cache
+    (attention KV here, MLA latents in mla.py).
+
+    Returns (q_pos (B, S), flat (B, S)): per-token absolute positions and
+    flat row indices into an (NB * block_size, ...) pool for ``seq`` new
+    tokens starting at positions[b].  Out-of-table writes (position beyond
+    the table's capacity) and padded rows (>= new_lens[b]) divert to the
+    null block's scratch rows — clamping them into a live block would
+    silently overwrite resident state."""
+    qp = positions[:, None] + jnp.arange(seq)[None, :]        # (B, S)
+    logical = qp // block_size
+    width = block_tables.shape[1]
+    blk = jnp.take_along_axis(block_tables, jnp.minimum(logical, width - 1),
+                              axis=1)
+    flat = blk * block_size + qp % block_size                 # (B, S)
+    flat = jnp.where(logical < width, flat, qp % block_size)
+    if new_lens is not None:
+        valid = jnp.arange(seq)[None, :] < new_lens[:, None]
+        flat = jnp.where(valid, flat, jnp.arange(seq)[None, :] % block_size)
+    return qp, flat
+
+
 def paged_attention(p: Params, cfg: AttnConfig, x: Array, *,
                     cache: Params, positions: Array,
                     block_tables: Array,
@@ -271,23 +297,13 @@ def paged_attention(p: Params, cfg: AttnConfig, x: Array, *,
     if cfg.qk_norm:
         q = rmsnorm(p["q_norm"], q)
         k = rmsnorm(p["k_norm"], k)
-    qp = positions[:, None] + jnp.arange(S)[None, :]         # (B, S)
+    # scatter new k/v into their pages (flat row index = block * BS + offset;
+    # overrun/padded writes divert to the null block — see paged_flat_indices)
+    qp, flat = paged_flat_indices(positions, S, block_tables, BS,
+                                  new_lens=new_lens)
     if cfg.use_rope:
         q = apply_rope(q, qp, cfg.rope_theta)
         k = apply_rope(k, qp, cfg.rope_theta)
-    # scatter new k/v into their pages (flat row index = block * BS + offset)
-    logical = qp // BS
-    width = block_tables.shape[1]
-    blk = jnp.take_along_axis(block_tables, jnp.minimum(logical, width - 1),
-                              axis=1)
-    flat = blk * BS + qp % BS                                # (B, S)
-    # out-of-table writes (position beyond the table's capacity) go to the
-    # null-block scratch — clamping them into the request's *last* block
-    # would silently overwrite live KV on overrun
-    flat = jnp.where(logical < width, flat, qp % BS)
-    if new_lens is not None:   # padded rows -> null-block scratch offsets
-        valid = jnp.arange(S)[None, :] < new_lens[:, None]
-        flat = jnp.where(valid, flat, jnp.arange(S)[None, :] % BS)
     flat = flat.reshape(-1)                                  # (B*S,)
     ck = cache["k"].reshape(NB * BS, Hkv, D).at[flat].set(
         k.astype(cache["k"].dtype).reshape(B * S, Hkv, D)).reshape(NB, BS, Hkv, D)

@@ -60,6 +60,18 @@ def init_mla_cache(cfg: MLAConfig, batch: int, max_len: int,
             "pos": jnp.zeros((), jnp.int32)}
 
 
+def init_paged_mla_cache(cfg: MLAConfig, num_blocks: int, block_size: int,
+                         dtype=jnp.bfloat16) -> Params:
+    """Physical latent block pools shared by all requests (no batch axis;
+    block 0 is the reserved null block).  MLA's whole point — caching only
+    (c_kv, k_rope) per token — carries over to paging: a block holds
+    block_size latent rows instead of block_size KV head vectors."""
+    return {"c_kv": jnp.zeros((num_blocks, block_size, cfg.kv_lora_rank),
+                              dtype),
+            "k_rope": jnp.zeros((num_blocks, block_size,
+                                 cfg.qk_rope_head_dim), dtype)}
+
+
 def _project_q(p, cfg: MLAConfig, x, positions):
     B, S, _ = x.shape
     q = L.dense(p["wq_b"], L.rmsnorm(p["q_norm"], L.dense(p["wq_a"], x)))
@@ -77,6 +89,8 @@ def _attend(cfg: MLAConfig, q_nope, q_rope, c_kv, k_rope, p, *,
     """Latent-space attention: score via up-projected keys, value from c_kv.
 
     q_nope: (B,S,H,dn)  q_rope: (B,S,H,dr)  c_kv: (B,T,r)  k_rope: (B,T,dr)
+    q_positions: (S,) shared across the batch (contiguous cache) or (B,S)
+    per-row (paged serving); kv_len: None, scalar, or (B,) per-row.
     Absorbed form: score_nope = (q_nope @ wk_b^T) @ c_kv^T — contracts in the
     rank-r latent space, so no per-token key materialization (decode-fast).
     Long sequences scan over q blocks (logits memory B*H*C*T, not B*H*S*T).
@@ -89,15 +103,18 @@ def _attend(cfg: MLAConfig, q_nope, q_rope, c_kv, k_rope, p, *,
     kp = jnp.arange(T)
     ckv = c_kv.astype(q_nope.dtype)
     krope = k_rope.astype(q_rope.dtype)
+    qpb = jnp.broadcast_to(q_positions, (B, S)) \
+        if q_positions.ndim == 1 else q_positions             # (B, S)
+    kvl = None if kv_len is None else jnp.broadcast_to(kv_len, (B,))
 
     def block(q_lat_b, q_rope_b, pos_b):
         s_nope = jnp.einsum("bshr,btr->bhst", q_lat_b, ckv)
         s_rope = jnp.einsum("bshd,btd->bhst", q_rope_b, krope)
         lg = (s_nope + s_rope).astype(jnp.float32) * scale
-        mask = pos_b[:, None] >= kp[None, :]
-        if kv_len is not None:
-            mask = mask & (kp[None, :] < kv_len)
-        lg = jnp.where(mask[None, None], lg, -1e30)
+        mask = pos_b[:, :, None] >= kp[None, None, :]         # (B, C, T)
+        if kvl is not None:
+            mask = mask & (kp[None, None, :] < kvl[:, None, None])
+        lg = jnp.where(mask[:, None], lg, -1e30)
         pr = jax.nn.softmax(lg, axis=-1).astype(ckv.dtype)
         return jnp.einsum("bhst,btr->bshr", pr, ckv)      # latent context
 
@@ -106,20 +123,58 @@ def _attend(cfg: MLAConfig, q_nope, q_rope, c_kv, k_rope, p, *,
         pad = (-S) % C
         qlp = jnp.pad(q_lat, ((0, 0), (0, pad), (0, 0), (0, 0)))
         qrp = jnp.pad(q_rope, ((0, 0), (0, pad), (0, 0), (0, 0)))
-        pp = jnp.pad(q_positions, (0, pad), constant_values=-1)
+        pp = jnp.pad(qpb, ((0, 0), (0, pad)), constant_values=-1)
         nq = qlp.shape[1] // C
         xs = (jnp.moveaxis(qlp.reshape(B, nq, C, H, -1), 1, 0),
               jnp.moveaxis(qrp.reshape(B, nq, C, H, -1), 1, 0),
-              pp.reshape(nq, C))
+              jnp.moveaxis(pp.reshape(B, nq, C), 1, 0))
         _, ys = jax.lax.scan(lambda _, x: (0.0, block(*x)), 0.0, xs)
         ctx_lat = jnp.moveaxis(ys, 0, 1).reshape(B, nq * C, H, -1)[:, :S]
     else:
-        ctx_lat = block(q_lat, q_rope, q_positions)
+        ctx_lat = block(q_lat, q_rope, qpb)
 
     wv = p["wv_b"]["w"].reshape(cfg.kv_lora_rank, H, cfg.v_head_dim)
     ctx = jnp.einsum("bshr,rhv->bshv", ctx_lat.astype(q_nope.dtype),
                      wv.astype(q_nope.dtype))
     return ctx.reshape(B, S, H * cfg.v_head_dim)
+
+
+def mla_paged_attention(p: Params, cfg: MLAConfig, x: Array, *,
+                        cache: Params, positions: Array,
+                        block_tables: Array,
+                        new_lens: Optional[Array] = None
+                        ) -> tuple[Array, Params]:
+    """Latent attention over block-paged (c_kv, k_rope) pools — the MLA
+    analogue of layers.paged_attention, same flat-index scheme: new latents
+    scatter at block_tables[b, pos // BS] * BS + pos % BS, out-of-table and
+    padded-row writes divert to the null block, and attention runs over the
+    gathered logical view with per-sequence causal/length masks.  Masked
+    entries contribute exactly-zero probability, so greedy decode is
+    token-identical to the contiguous-cache path on the unmasked prefix."""
+    B, S, _ = x.shape
+    NB, BS, r = cache["c_kv"].shape
+    kv = L.dense(p["wkv_a"], x)
+    c_kv = L.rmsnorm(p["kv_norm"], kv[..., : cfg.kv_lora_rank])
+    k_rope_new = kv[..., cfg.kv_lora_rank:]
+    qp, flat = L.paged_flat_indices(positions, S, block_tables, BS,
+                                    new_lens=new_lens)
+    k_rope_new = L.apply_rope(k_rope_new[:, :, None, :], qp,
+                              cfg.rope_theta)[:, :, 0, :]
+    flat = flat.reshape(-1)
+    cc = cache["c_kv"].reshape(NB * BS, r).at[flat].set(
+        c_kv.astype(cache["c_kv"].dtype).reshape(B * S, r)).reshape(NB, BS, r)
+    dr = cache["k_rope"].shape[-1]
+    cr = cache["k_rope"].reshape(NB * BS, dr).at[flat].set(
+        k_rope_new.astype(cache["k_rope"].dtype).reshape(B * S, dr)
+        ).reshape(NB, BS, dr)
+    T = block_tables.shape[1] * BS
+    g_ckv = cc[block_tables].reshape(B, T, r)
+    g_rope = cr[block_tables].reshape(B, T, dr)
+    q_nope, q_rope = _project_q(p, cfg, x, qp)
+    kv_len = positions + (new_lens if new_lens is not None else S)
+    ctx = _attend(cfg, q_nope, q_rope, g_ckv, g_rope, p,
+                  q_positions=qp, kv_len=kv_len)
+    return L.dense(p["wo"], ctx), {"c_kv": cc, "k_rope": cr}
 
 
 def mla_attention(p: Params, cfg: MLAConfig, x: Array, *,

@@ -122,13 +122,16 @@ def init_paged_cache(arch: ArchConfig, num_blocks: int, block_size: int,
 
     Two state classes, side by side (serving/cache_manager.py is the host
     side of both):
-      * attn-family blocks get *paged KV block pools* — no batch axis; the
-        pool is shared by every in-flight request and indexed through
-        per-request block tables (layers.paged_attention);
+      * attn-family blocks — including zamba2's shared block (per-
+        application pools via this function's repeat stacking) and MLA's
+        latent cache — get *paged block pools*: no batch axis; the pool is
+        shared by every in-flight request and indexed through per-request
+        block tables (layers.paged_attention, mla.mla_paged_attention);
       * mamba2 / cross_attn blocks get *slot-indexed state pools* — leading
         axis ``slots + 1`` (O(1)-per-request state: one row per engine slot
         plus a reserved null row for inactive batch rows).  ``slots`` must
-        be > 0 when the pattern contains such blocks."""
+        be > 0 when the pattern contains such blocks.  wdec blocks carry
+        both: a paged self-attn pool and a slot-state encoder-K/V pool."""
     caches = []
     for seg in arch.pattern:
         def one(_):
@@ -143,6 +146,43 @@ def init_paged_cache(arch: ArchConfig, num_blocks: int, block_size: int,
     return caches
 
 
+def encode_frontend(params: Params, arch: ArchConfig, frontend: Array, *,
+                    impl: str = "xla", remat: str = "none",
+                    act_sharding=None) -> Array:
+    """Run the fixed-length encoder stack over precomputed frame embeddings
+    (B, enc_len, d_model) -> encoder output (B, enc_len, d_model).  Shared
+    by the training/wave forward (lm_apply's audio branch) and by serving
+    admission (admit_slot runs it ONCE per request, never per step)."""
+    cdt = _compute_dtype(arch)
+    enc = frontend.astype(cdt)
+    enc = enc + sinusoidal_positions(enc.shape[1], arch.d_model).astype(cdt)
+    enc_p = params["encoder"]
+    for segp in enc_p["segments"]:
+        enc, _, _ = _apply_segment(segp, ("enc_attn",), arch, enc,
+                                   impl=impl, remat=remat,
+                                   act_sharding=act_sharding)
+    return B.norm_apply(arch, enc_p["final_norm"], enc)
+
+
+def _scatter_cross_kv(pool: Params, slot_id, attn_stack: Params,
+                      cfg, src: Array) -> Params:
+    """Project ``src`` (T, d_model) through each application's wk/wv (params
+    stacked over the segment repeat axis) and write the result into this
+    slot's rows of a (repeat, slots+1, T, Hkv, D) cross-K/V pool.  Shared by
+    the cross_attn (vision frontend) and wdec (encoder output) admission
+    branches so the projection convention cannot drift between them."""
+    def kv_of(pl, cfg=cfg, f=src):
+        k = L.dense(pl["wk"], f).reshape(-1, cfg.n_kv_heads, cfg.head_dim)
+        v = L.dense(pl["wv"], f).reshape(-1, cfg.n_kv_heads, cfg.head_dim)
+        if cfg.qk_norm:
+            k = L.rmsnorm(pl["k_norm"], k)
+        return k, v
+
+    k, v = jax.vmap(kv_of)(attn_stack)                       # (repeat, T, ..)
+    return {"k": pool["k"].at[:, slot_id].set(k.astype(pool["k"].dtype)),
+            "v": pool["v"].at[:, slot_id].set(v.astype(pool["v"].dtype))}
+
+
 def admit_slot(params: Params, arch: ArchConfig, pools: list, slot_id,
                frontend: Optional[Array] = None) -> list:
     """Reset one engine slot's rows across every slot-state pool (paged KV
@@ -155,8 +195,17 @@ def admit_slot(params: Params, arch: ArchConfig, pools: list, slot_id,
     admitted request carries ``frontend`` patch embeddings (1, T, d_model) —
     filled with the cross K/V projections computed *once* here, never again
     per step (the wave Server recomputes nothing either: it serves zero
-    cross K/V, which the zeroed path reproduces exactly)."""
+    cross K/V, which the zeroed path reproduces exactly).  wdec rows get
+    the encoder cross K/V: ``frontend`` frame embeddings (1, enc_len,
+    d_model) run through the encoder stack once, then every decoder layer's
+    cross projections are written into this slot's rows; without a frontend
+    the rows are zeroed (matching the wave Server, which never filled its
+    cross cache)."""
     cdt = _compute_dtype(arch)
+    enc_out = None
+    if frontend is not None and \
+            any("wdec" in seg.blocks for seg in arch.pattern):
+        enc_out = encode_frontend(params, arch, frontend)[0]     # (T, D)
     out = []
     for si, seg in enumerate(arch.pattern):
         segp = params["segments"][si]
@@ -164,7 +213,18 @@ def admit_slot(params: Params, arch: ArchConfig, pools: list, slot_id,
         for bi, kind in enumerate(seg.blocks):
             key = f"b{bi}"
             pool = pools[si][key]
-            if kind == "mamba2":
+            if kind == "wdec":
+                cross = pool["cross"]
+                if enc_out is None:
+                    newc = jax.tree.map(lambda t: t.at[:, slot_id].set(0.0),
+                                        cross)
+                else:
+                    cfg = B.attn_cfg_for(arch, causal=False, use_rope=False)
+                    newc = _scatter_cross_kv(cross, slot_id,
+                                             segp[key]["xattn"], cfg,
+                                             enc_out.astype(cdt))
+                d[key] = {"self": pool["self"], "cross": newc}
+            elif kind == "mamba2":
                 d[key] = jax.tree.map(lambda t: t.at[:, slot_id].set(0.0),
                                       pool)
             elif kind == "cross_attn":
@@ -174,23 +234,9 @@ def admit_slot(params: Params, arch: ArchConfig, pools: list, slot_id,
                 else:
                     cfg = B.attn_cfg_for(arch, causal=False, gated=True,
                                          use_rope=False)
-                    f = frontend[0].astype(cdt)              # (T, D)
-
-                    def kv_of(pl, cfg=cfg, f=f):
-                        k = L.dense(pl["wk"], f).reshape(
-                            -1, cfg.n_kv_heads, cfg.head_dim)
-                        v = L.dense(pl["wv"], f).reshape(
-                            -1, cfg.n_kv_heads, cfg.head_dim)
-                        if cfg.qk_norm:
-                            k = L.rmsnorm(pl["k_norm"], k)
-                        return k, v
-
-                    k, v = jax.vmap(kv_of)(segp[key]["attn"])  # (repeat,T,..)
-                    d[key] = {
-                        "k": pool["k"].at[:, slot_id].set(
-                            k.astype(pool["k"].dtype)),
-                        "v": pool["v"].at[:, slot_id].set(
-                            v.astype(pool["v"].dtype))}
+                    d[key] = _scatter_cross_kv(pool, slot_id,
+                                               segp[key]["attn"], cfg,
+                                               frontend[0].astype(cdt))
             else:
                 d[key] = pool
         out.append(d)
@@ -290,20 +336,18 @@ def lm_apply(params: Params, arch: ArchConfig, tokens: Optional[Array] = None, *
     if arch.frontend == "vision" and frontend is not None:
         cross_input = frontend.astype(cdt)
     if arch.frontend == "audio" and frontend is not None:
-        enc = frontend.astype(cdt)
-        enc = enc + sinusoidal_positions(enc.shape[1], arch.d_model).astype(cdt)
-        enc_p = params["encoder"]
-        for segp in enc_p["segments"]:
-            enc, aux, _ = _apply_segment(segp, ("enc_attn",), arch, enc,
-                                         impl=impl, remat=remat,
-                                         act_sharding=act_sharding)
-            aux_total = aux_total + aux
-        cross_input = B.norm_apply(arch, enc_p["final_norm"], enc)
+        cross_input = encode_frontend(params, arch, frontend, impl=impl,
+                                      remat=remat, act_sharding=act_sharding)
 
     x = L.embed(params["embed"], tokens, arch.d_model).astype(cdt)
     if arch.encoder is not None:   # whisper decoder: absolute sinusoidal positions
         if cache is None:
             pe = sinusoidal_positions(x.shape[1], arch.d_model)
+        elif block_tables is not None:
+            # paged serving: each batch row decodes at its own absolute
+            # position, so the PE is per-row (B, S, D)
+            pe = jax.vmap(lambda p0: sinusoidal_at(
+                p0 + jnp.arange(x.shape[1]), arch.d_model))(positions)
         else:  # decode: offset from the first wdec self-attn cache position
             pos0 = cache[0]["b0"]["self"]["pos"][0]
             pe = sinusoidal_at(pos0 + jnp.arange(x.shape[1]), arch.d_model)

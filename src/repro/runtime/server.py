@@ -1,43 +1,46 @@
-"""Serving runtime: batched prefill + decode in synchronized waves.
+"""DEPRECATED compatibility shim: the wave-synchronized Server is gone.
 
-A wave = up to `slots` requests, prompts right-aligned/padded to a common
-length, one batched prefill, then lock-step decode until every request in
-the wave finished (early finishers are masked).  Wave scheduling keeps the
-shared per-layer cache position scalar correct.
+This module used to implement wave-synchronized serving — up to ``slots``
+equal-length prompts batched per wave, one full-cache prefill, lock-step
+decode until the slowest request finished.  That path (and its per-wave
+full-cache prefill) has been deleted: ``repro/serving/
+ContinuousBatchingEngine`` now serves every architecture in the zoo —
+attention-only, MoE, MLA latent attention, pure-SSM, hybrid, cross-attention
+VLM, zamba2's weight-shared block and whisper's encoder-decoder — through
+the unified paged-KV / slot-state cache (serving/cache_manager.py), with
+greedy outputs pinned token-for-token against the retired wave
+implementation (tests/goldens_serving.json) and a sharded multi-host decode
+test (tests/test_serving.py::test_multihost_decode_parity_and_cache_placement).
 
-True continuous batching (per-slot positions, paged KV cache + slot-state
-pools, chunked prefill, admission scheduling) lives in ``repro/serving/`` —
-ContinuousBatchingEngine is greedy-parity-tested against this Server and is
-the production path for attention-only, hybrid attn+SSM and cross-attention
-architectures (SSM state and cross K/V ride the slot-indexed pools, see
-serving/cache_manager.py).  This wave Server remains as the comparison
-baseline (benchmarks/serve_bench.py) and as the serving path for the
-still-excluded archs: zamba2's weight-shared block and whisper's
-encoder-decoder.
-
-The ASA plan supplies param/cache shardings (decode picks MP — KV cache
-time-sharded over `model`; see core/sharding.py).
+``Server`` survives only as a thin shim preserving the old API —
+``submit(Request)`` then ``run_until_drained()``, with the caller's Request
+objects mutated in place — while delegating every token to the engine.  New
+code should construct ``ContinuousBatchingEngine`` directly: it exposes the
+request scheduler (priorities, token budgets), per-request frontends,
+streaming admission via ``step()``, and JSON serving metrics, none of which
+fit the legacy interface.  Restrictions the wave path never enforced now
+apply here too: max_new_tokens >= 1, non-empty prompts shorter than
+max_len (the wave loop admitted a prompt of exactly max_len and served a
+single token; the engine needs the position for that token's KV), and
+unique in-flight request ids.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
+import warnings
 from typing import Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
-from jax.sharding import NamedSharding
 
-from repro.configs.base import ArchConfig, ShapeSpec
+from repro.configs.base import ArchConfig
 from repro.core.asa import AdaptiveScheduler
-from repro.launch.mesh import mesh_shape_of
-from repro.models import transformer as T
-from repro.runtime import steps as ST
+from repro.serving.engine import ContinuousBatchingEngine
+from repro.serving.engine import Request as EngineRequest
 
 
 @dataclasses.dataclass
 class Request:
+    """Legacy request shape (no priority / frontend / scheduler fields)."""
     id: int
     prompt: np.ndarray               # (S,) int32
     max_new_tokens: int = 16
@@ -46,76 +49,60 @@ class Request:
 
 
 class Server:
+    """Thin delegate to ContinuousBatchingEngine keeping the wave-era API.
+
+    Extra keyword arguments (block_size, num_blocks, prefill_chunk, ...)
+    pass straight through to the engine.
+    """
+
     def __init__(self, arch: ArchConfig, params, mesh, *,
                  slots: int = 4, max_len: int = 512,
-                 scheduler: Optional[AdaptiveScheduler] = None):
-        self.arch, self.params, self.mesh = arch, params, mesh
+                 scheduler: Optional[AdaptiveScheduler] = None,
+                 **engine_kwargs):
+        warnings.warn(
+            "runtime.server.Server is a deprecated compatibility shim over "
+            "repro.serving.ContinuousBatchingEngine — the wave decode path "
+            "has been removed; construct the engine directly",
+            DeprecationWarning, stacklevel=2)
+        self.arch, self.mesh = arch, mesh
         self.slots, self.max_len = slots, max_len
-        ms = mesh_shape_of(mesh)
-        shape = ShapeSpec("serve", max_len, slots, "decode")
-        sched = scheduler or AdaptiveScheduler(faithful=False)
-        self.plan = sched.plan(arch, shape, ms)
-        self._cache_ns = jax.tree.map(lambda s: NamedSharding(mesh, s),
-                                      self.plan.cache_specs(slots))
-        self._cdtype = jnp.float32 if arch.dtype == "float32" else jnp.bfloat16
-        self._prefill = jax.jit(ST.make_prefill_step(arch))
-        self._decode = jax.jit(ST.make_decode_step(arch), donate_argnums=(1,))
-        self.queue: list[Request] = []
+        self.engine = ContinuousBatchingEngine(
+            arch, params, mesh, slots=slots, max_len=max_len, asa=scheduler,
+            **engine_kwargs)
         self.completed: list[Request] = []
-        self.decode_steps = 0
-        self.waves = 0
+        self._submitted: dict[int, Request] = {}
 
-    def submit(self, req: Request):
-        self.queue.append(req)
+    @property
+    def params(self):
+        return self.engine.params
 
-    def _sample(self, logits) -> np.ndarray:
-        logits = np.asarray(logits, np.float32)[:, : self.arch.vocab]
-        return np.argmax(logits, axis=-1).astype(np.int32)
+    @property
+    def plan(self):
+        return self.engine.plan
 
-    def _run_wave(self, wave: list[Request]):
-        B = self.slots
-        lens = {len(r.prompt) for r in wave}
-        assert len(lens) == 1, \
-            "wave scheduling batches equal-length prompts (pad client-side)"
-        S = lens.pop()
-        toks = np.zeros((B, S), np.int32)
-        for i, r in enumerate(wave):
-            toks[i] = r.prompt
-        cache = jax.device_put(
-            T.init_cache(self.arch, B, self.max_len, self._cdtype),
-            self._cache_ns)
-        logits, cache = self._prefill(self.params, cache, jnp.asarray(toks))
-        nxt = self._sample(logits)
-        for i, r in enumerate(wave):
-            r.out_tokens.append(int(nxt[i]))
-        active = {i: r for i, r in enumerate(wave)
-                  if len(r.out_tokens) < r.max_new_tokens}
-        # bound on the *active* requests: a finished slot stops growing, so
-        # wave[0]'s length alone would let longer requests decode past
-        # max_len and clamp-overwrite the last cache position
-        while active and S + max(len(r.out_tokens)
-                                 for r in active.values()) < self.max_len:
-            last = np.zeros((B, 1), np.int32)
-            for i, r in enumerate(wave):
-                last[i, 0] = r.out_tokens[-1]
-            logits, cache = self._decode(self.params, cache,
-                                         jnp.asarray(last))
-            nxt = self._sample(logits)
-            self.decode_steps += 1
-            for i in list(active):
-                r = active[i]
-                r.out_tokens.append(int(nxt[i]))
-                if len(r.out_tokens) >= r.max_new_tokens:
-                    r.done = True
-                    del active[i]
-        for r in wave:
-            r.done = True
-            self.completed.append(r)
-        self.waves += 1
+    @property
+    def decode_steps(self) -> int:
+        return self.engine.metrics.decode_steps
+
+    @property
+    def waves(self) -> int:
+        """Always 0 — wave scheduling no longer exists."""
+        return 0
+
+    def submit(self, req: Request) -> None:
+        self.engine.submit(EngineRequest(
+            id=req.id, prompt=np.asarray(req.prompt, np.int32),
+            max_new_tokens=req.max_new_tokens))
+        self._submitted[req.id] = req
 
     def run_until_drained(self) -> float:
-        t0 = time.perf_counter()
-        while self.queue:
-            wave, self.queue = self.queue[:self.slots], self.queue[self.slots:]
-            self._run_wave(wave)
-        return time.perf_counter() - t0
+        wall = self.engine.run_until_drained()
+        # mirror engine results back onto the caller's legacy objects
+        for er in self.engine.completed:
+            legacy = self._submitted.pop(er.id, None)
+            if legacy is not None:
+                legacy.out_tokens = list(er.out_tokens)
+                legacy.done = True
+                self.completed.append(legacy)
+        self.engine.completed.clear()
+        return wall

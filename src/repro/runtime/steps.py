@@ -165,8 +165,11 @@ def make_paged_decode_step(arch: ArchConfig, *, impl: str = "xla",
 def make_slot_admit_step(arch: ArchConfig):
     """-> admit(params, cache, slot_id[, frontend]) -> cache.  Resets one
     engine slot's rows in every slot-state pool on admission: mamba2 state
-    zeroed, cross-attn K/V zeroed or computed once from the request's
-    ``frontend`` embeddings (1, T, d_model).  No-op for attn block pools."""
+    zeroed; cross-attn K/V zeroed or computed once from the request's
+    ``frontend`` patch embeddings (1, T, d_model); wdec encoder K/V zeroed
+    or computed by running the encoder ONCE over the request's frame
+    embeddings (whisper admission — see transformer.admit_slot).  No-op for
+    paged block pools."""
     def slot_admit_step(params, cache, slot_id, frontend=None):
         return T.admit_slot(params, arch, cache, slot_id, frontend=frontend)
     return slot_admit_step

@@ -16,13 +16,15 @@ Layers (bottom up):
                     tokens-per-second counters, emitted as JSON.
   engine.py         the continuous-batching engine: per-slot decode
                     positions, admission into freed slots every step,
-                    chunked prefill interleaved with decode; serves
-                    attention-only, hybrid attn+SSM and cross-attention
-                    architectures.
+                    chunked prefill interleaved with decode; serves every
+                    architecture in the zoo — attention-only, MoE, MLA
+                    latent attention, pure-SSM, hybrid, cross-attention,
+                    zamba2's weight-shared block and whisper's
+                    encoder-decoder.
 
-The wave-synchronized Server (runtime/server.py) remains as the comparison
-baseline and as the path for the still-excluded architectures (zamba2's
-weight-shared block, whisper's encoder-decoder).
+The wave-synchronized Server was retired: runtime/server.py is now a thin
+deprecation shim that delegates to this engine (greedy parity with the
+pre-shim wave implementation is pinned in tests/goldens_serving.json).
 """
 from repro.serving.cache_manager import (PAGEABLE_KINDS, SLOT_STATE_KINDS,
                                          UnifiedCacheManager)

@@ -3,14 +3,17 @@
 The continuous-batching engine juggles two classes of per-request state,
 and this module is the single host-side owner of both:
 
-  * **length-indexed** — attention KV grows one entry per token.  It lives
-    in fixed-size physical blocks (paged_cache.py: free-list allocator +
-    per-request block tables over the pools from
-    models/transformer.init_paged_cache).  Block 0 is the reserved null
-    block for idle slots / padded table tails / overrun writes.
+  * **length-indexed** — attention KV (and MLA's latent ``c_kv/k_rope``)
+    grows one entry per token.  It lives in fixed-size physical blocks
+    (paged_cache.py: free-list allocator + per-request block tables over
+    the pools from models/transformer.init_paged_cache; zamba2's
+    weight-shared block pages one pool per application via the
+    repeat-stacked axis).  Block 0 is the reserved null block for idle
+    slots / padded table tails / overrun writes.
 
-  * **slot-indexed** — mamba2 ``conv_x/conv_b/conv_c/ssm`` state and
-    cross-attention K/V are O(1) per request regardless of generated
+  * **slot-indexed** — mamba2 ``conv_x/conv_b/conv_c/ssm`` state,
+    cross-attention K/V and whisper's per-request encoder K/V (the
+    ``wdec`` cross pool) are O(1) per request regardless of generated
     length.  They live in pools with one row per engine slot plus a
     trailing reserved **null slot** row (the slot-state analogue of the
     null block): inactive batch rows in a fixed-shape decode step gather
@@ -35,35 +38,41 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.serving.paged_cache import PagedCacheConfig, PagedKVCache
 
-PAGEABLE_KINDS = {"attn", "moe_attn"}          # length-indexed, block-paged
-SLOT_STATE_KINDS = {"mamba2", "cross_attn"}    # O(1) state, slot-indexed
+# length-indexed caches, block-paged through per-request tables.  zamba2's
+# weight-shared block pages one pool per application (the repeat-stacked
+# leading axis), MLA pages its latent (c_kv, k_rope) rows.
+PAGEABLE_KINDS = {"attn", "moe_attn", "shared_attn", "mla", "mla_dense",
+                  "wdec"}
+# O(1)-per-request state, slot-indexed: mamba2 recurrent state, cross-attn
+# K/V, and wdec's per-request encoder K/V (wdec carries BOTH classes: paged
+# self-attn KV plus the slot-state cross pool filled once at admission).
+SLOT_STATE_KINDS = {"mamba2", "cross_attn", "wdec"}
 SERVABLE_KINDS = PAGEABLE_KINDS | SLOT_STATE_KINDS
 
 
 def check_servable(arch: ArchConfig) -> None:
-    """Raise with a precise reason when the continuous engine cannot serve
-    this architecture (the wave Server in runtime/server.py still can)."""
+    """Raise when the continuous engine cannot serve this architecture.
+
+    Every block kind in the registry — attention-family, MoE, MLA latent
+    attention, mamba2 SSM, gated cross-attention, zamba2's weight-shared
+    block and whisper's encoder-decoder — now has a paged or slot-state
+    path, so this only fires for a kind the serving cache layer has never
+    seen (a guard for future archs, not a supported-subset check)."""
     kinds = {k for seg in arch.pattern for k in seg.blocks}
     unsupported = kinds - SERVABLE_KINDS
     if unsupported:
-        detail = {
-            "shared_attn": "zamba2's shared transformer block mixes every "
-                           "slot's hidden state through one weight-shared "
-                           "cache",
-            "wdec": "whisper's encoder-decoder needs the fixed-length "
-                    "encoder pass per request",
-        }
-        why = "; ".join(detail.get(k, f"{k!r} has no paged/slot-state path")
-                        for k in sorted(unsupported))
         raise ValueError(
-            f"continuous engine cannot serve {arch.name}: "
-            f"{sorted(unsupported)} excluded ({why}) — use "
-            f"runtime.server.Server (wave baseline)")
-    if arch.encoder is not None:
+            f"continuous engine cannot serve {arch.name}: block kinds "
+            f"{sorted(unsupported)} have no paged/slot-state serving cache "
+            f"(see serving/cache_manager.py)")
+    if arch.encoder is not None and "wdec" not in kinds:
+        # the admission-time encoder pass lands its K/V in wdec cross pools;
+        # an encoder arch without wdec decoder blocks would silently serve
+        # raw (un-encoded) frontend projections
         raise ValueError(
-            f"continuous engine cannot serve {arch.name}: encoder-decoder "
-            f"architectures need a per-request encoder pass — use "
-            f"runtime.server.Server (wave baseline)")
+            f"continuous engine cannot serve {arch.name}: arch.encoder "
+            f"requires wdec decoder blocks to receive the encoder K/V at "
+            f"admission")
 
 
 class UnifiedCacheManager(PagedKVCache):

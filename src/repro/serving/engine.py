@@ -1,23 +1,27 @@
 """Continuous-batching engine: per-slot decode positions over a unified
-serving cache (paged KV block pools + slot-indexed state pools), admission
-into freed slots every step, chunked prefill interleaved with decode.
+serving cache (paged KV / latent block pools + slot-indexed state pools),
+admission into freed slots every step, chunked prefill interleaved with
+decode.  This is the ONLY decode path — the wave-synchronized Server was
+retired to a compatibility shim delegating here (runtime/server.py).
 
-Contrast with runtime/server.py (the wave baseline, kept for comparison and
-for the remaining excluded archs — zamba2's shared block, whisper's
-enc-dec): a wave stalls all slots until the slowest request finishes and
-replays a full-cache prefill per wave.  Here each batch row carries its own
+Every architecture in the zoo is served.  Each batch row carries its own
 position vector, block table and slot-state row, so a finished request's
 slot (and its cache blocks) are reused on the very next step, and a long
 prompt is prefilled ``prefill_chunk`` tokens at a time between decode steps
-instead of blocking them.  Hybrid attn+SSM and cross-attention archs are
-served through the slot-state pools (serving/cache_manager.py): mamba2
-state rides row `slot`, carried as h0 across prefill chunks; cross K/V is
-written once at admission.
+instead of blocking them.  Per-family cache routing
+(serving/cache_manager.py):
+  * attention-family KV — paged block pools, incl. zamba2's weight-shared
+    block (one pool per application via the repeat-stacked axis) and MLA's
+    latent (c_kv, k_rope) rows;
+  * mamba2 state — slot-state rows, carried as h0 across prefill chunks;
+  * cross-attn / whisper encoder K/V — slot-state rows written once at
+    admission (the whisper encoder runs there, never per step).
 
 Engine step = admit -> one prefill chunk -> one decode step:
   1. every free slot pulls from the RequestScheduler (priority/FCFS +
-     max-tokens budget) if its prompt's blocks fit the pool; admission
-     resets the slot's state-pool rows (make_slot_admit_step);
+     max-tokens budget, footprints capped at max_len) if its prompt's
+     blocks fit the pool; admission resets the slot's state-pool rows
+     (make_slot_admit_step);
   2. the oldest prefilling request advances one chunk; finishing the prompt
      samples its first token (TTFT);
   3. all decoding slots advance one token.  A slot needing a new block under
@@ -25,11 +29,13 @@ Engine step = admit -> one prefill chunk -> one decode step:
      blocks freed, request requeued with prompt+generated as its new prefill
      — slot-state needs no checkpoint: re-admission re-zeroes the row).
 
-Greedy decode is token-for-token identical to the wave Server: the paged
-attention path masks exactly the same prefix (see layers._paged_sdpa) and
-the slot-state path runs the same recurrence on gathered rows, which
-tests/test_serving.py asserts for attention-only, hybrid and cross-attn
-configs.
+Greedy decode is token-for-token identical to the retired wave Server: the
+paged attention paths mask exactly the same prefix (layers._paged_sdpa,
+mla.mla_paged_attention) and the slot-state path runs the same recurrence
+on gathered rows.  tests/test_serving.py pins this against golden token
+sequences frozen from the pre-shim wave implementation, for every arch
+family, including under forced preemption and on a multi-host (data=4,
+model=2) mesh.
 """
 from __future__ import annotations
 
@@ -58,10 +64,15 @@ class Request:
     prompt: np.ndarray               # (S,) int32
     max_new_tokens: int = 16
     priority: int = 0                # lower = more urgent
-    frontend: Optional[np.ndarray] = None   # (1, T, d_model) patch embeddings
+    # per-request modality input, consumed ONCE at admission: vision patch
+    # embeddings (1, n_img_tokens, d_model) -> cross-attn K/V rows, or audio
+    # frame embeddings (1, enc_len, d_model) -> encoder pass -> wdec cross
+    # K/V rows (transformer.admit_slot)
+    frontend: Optional[np.ndarray] = None
     out_tokens: list = dataclasses.field(default_factory=list)
     done: bool = False
     _sched_seq: Optional[int] = None   # set by RequestScheduler (FCFS order)
+    _charged_footprint: Optional[int] = None   # budget charge at admission
 
     def context(self) -> np.ndarray:
         """prompt + generated-so-far — what a (re-)prefill must cover."""
@@ -117,6 +128,13 @@ class ContinuousBatchingEngine:
             ST.make_slot_admit_step(arch), donate_argnums=(1,)) \
             if self.cache.has_slot_state else None
         self.scheduler = scheduler or RequestScheduler()
+        # the engine truncates every request to max_len, so the token budget
+        # must charge capped footprints — uncapped, a long-prompt request
+        # over-charges and stalls admission forever.  The engine OWNS the
+        # cap (unconditional overwrite): it mirrors this engine's
+        # truncation, and a stale cap from a previous engine with a
+        # different max_len would mis-charge the budget
+        self.scheduler.footprint_cap = self.max_len
         self.metrics = metrics or ServingMetrics()
         self.slots = [_Slot(idx=i) for i in range(slots)]
         self.completed: list[Request] = []
@@ -126,6 +144,19 @@ class ContinuousBatchingEngine:
     def submit(self, req: Request, now: Optional[float] = None) -> None:
         if len(req.prompt) == 0:
             raise ValueError(f"request {req.id} has an empty prompt")
+        if req.max_new_tokens < 1:
+            # a request that may not generate anything would still burn a
+            # slot and a full prefill, and the prefill path unconditionally
+            # samples its first token — reject instead of emitting one
+            raise ValueError(f"request {req.id}: max_new_tokens must be "
+                             f">= 1 (got {req.max_new_tokens})")
+        if req.done or req.out_tokens or req._sched_seq is not None:
+            # a recycled Request object would re-prefill its old output as
+            # context and jump the FCFS queue with its stale arrival seq
+            raise ValueError(
+                f"request {req.id} has already been served (done={req.done}, "
+                f"{len(req.out_tokens)} generated tokens) — submit a fresh "
+                f"Request object")
         if len(req.prompt) >= self.max_len:
             raise ValueError(f"prompt ({len(req.prompt)}) >= max_len")
         if req.id in self._active_ids:

@@ -6,8 +6,10 @@ Policy:
     request re-enters with its *original* sequence number, so it goes back
     to the head of its class rather than the tail;
   * max-tokens budgeting — admission is refused while the worst-case token
-    footprint of running requests (prompt + max_new_tokens each) would
-    exceed ``max_tokens_in_flight``;
+    footprint of running requests (prompt + max_new_tokens each, capped at
+    ``footprint_cap`` — the engine's max_len truncation — so a long-prompt
+    request is charged what it can actually consume) would exceed
+    ``max_tokens_in_flight``;
   * preemption — under cache pressure the engine asks for a victim: the
     longest-running request (most generated tokens) in the lowest priority
     class, which frees the most blocks per preemption and restarts the
@@ -21,8 +23,10 @@ from typing import Optional
 
 
 class RequestScheduler:
-    def __init__(self, *, max_tokens_in_flight: Optional[int] = None):
+    def __init__(self, *, max_tokens_in_flight: Optional[int] = None,
+                 footprint_cap: Optional[int] = None):
         self.max_tokens_in_flight = max_tokens_in_flight
+        self.footprint_cap = footprint_cap     # engine sets this to max_len
         self._heap: list = []                  # (priority, seq, Request)
         self._seq = itertools.count()
         self._in_flight_tokens = 0
@@ -48,7 +52,13 @@ class RequestScheduler:
 
     # -- admission ----------------------------------------------------------
     def _footprint(self, req) -> int:
-        return len(req.prompt) + req.max_new_tokens
+        """Worst-case resident tokens — capped at footprint_cap because the
+        engine truncates every request there (engine._target_total): an
+        uncapped estimate over-charged the budget and could stall admission
+        of requests the cache can in fact hold."""
+        fp = len(req.prompt) + req.max_new_tokens
+        return fp if self.footprint_cap is None else min(fp,
+                                                         self.footprint_cap)
 
     def next_admission(self):
         """Pop the next request iff the token budget admits it, else None.
@@ -62,11 +72,18 @@ class RequestScheduler:
                 > self.max_tokens_in_flight):
             return None
         heapq.heappop(self._heap)
-        self._in_flight_tokens += self._footprint(req)
+        # remember the exact charge: if footprint_cap changes while this
+        # request is in flight (scheduler reused across engines), releasing
+        # a re-computed footprint would leak budget forever
+        req._charged_footprint = self._footprint(req)
+        self._in_flight_tokens += req._charged_footprint
         return req
 
     def on_finish(self, req) -> None:
-        self._in_flight_tokens -= self._footprint(req)
+        charged = getattr(req, "_charged_footprint", None)
+        self._in_flight_tokens -= (self._footprint(req) if charged is None
+                                   else charged)
+        req._charged_footprint = None
 
     # -- preemption ---------------------------------------------------------
     def pick_preemption_victim(self, running: list):

@@ -1,8 +1,14 @@
 """Continuous-batching serving subsystem tests: paged-cache invariants,
-scheduler admission/preemption policy, and greedy-decode parity between the
-continuous engine and the wave Server baseline — for attention-only,
-hybrid attn+SSM and cross-attention architectures (the slot-state pools of
-serving/cache_manager.py)."""
+scheduler admission/preemption policy, and greedy-decode parity for every
+architecture family the engine serves — attention-only, pure-SSM, hybrid,
+cross-attention, zamba2's weight-shared block, whisper's encoder-decoder
+and MLA latent attention.
+
+Parity is asserted against tests/goldens_serving.json — token sequences
+frozen from the pre-shim wave Server (see gen_serving_goldens.py).  The
+wave Server is now a compatibility shim over the engine, so a live
+comparison would be circular; the pinned goldens keep parity falsifiable.
+"""
 import json
 
 import jax
@@ -10,42 +16,39 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs.base import ArchConfig, EncoderSpec, Segment, ShapeSpec, \
-    SSMSpec
+from repro.configs import ARCHS
+from repro.configs.base import ArchConfig, Segment, ShapeSpec
 from repro.core.asa import AdaptiveScheduler
 from repro.launch.mesh import make_host_mesh, mesh_shape_of
 from repro.models import layers as L
 from repro.models import transformer as T
-from repro.runtime.server import Request as WaveRequest, Server
 from repro.serving import (BlockAllocator, ContinuousBatchingEngine,
                            PagedKVCache, Request, RequestScheduler,
                            ServingMetrics, UnifiedCacheManager)
+from repro.serving.cache_manager import check_servable
 from repro.serving.paged_cache import NULL_BLOCK, PagedCacheConfig, blocks_for
+from serving_fixtures import (ARCH_BY_KEY, TINY, TINY_CROSS, TINY_ENCDEC,
+                              TINY_HYBRID, TINY_MLA, TINY_SHARED, TINY_SSM,
+                              load_goldens, scenario_requests)
 
-TINY = ArchConfig(name="tiny-serve", family="dense", n_layers=2, d_model=64,
-                  n_heads=4, n_kv_heads=2, d_ff=128, vocab=256,
-                  pattern=(Segment(("attn",), 2),), dtype="float32",
-                  param_dtype="float32")
+_PARAMS_CACHE: dict[str, dict] = {}
 
-TINY_SSM = ArchConfig(name="tiny-ssm", family="ssm", n_layers=2, d_model=64,
-                      n_heads=4, n_kv_heads=4, d_ff=128, vocab=256,
-                      ssm=SSMSpec(d_state=16, head_dim=16, chunk=16),
-                      pattern=(Segment(("mamba2",), 2),), dtype="float32",
-                      param_dtype="float32")
 
-TINY_HYBRID = ArchConfig(name="tiny-hybrid", family="hybrid", n_layers=4,
-                         d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
-                         vocab=256,
-                         ssm=SSMSpec(d_state=16, head_dim=16, d_conv=4,
-                                     chunk=4),
-                         pattern=(Segment(("attn", "mamba2"), 2),),
-                         dtype="float32", param_dtype="float32")
+def _params_for(arch):
+    if arch.name not in _PARAMS_CACHE:
+        _PARAMS_CACHE[arch.name] = T.init_lm(jax.random.PRNGKey(0), arch)
+    return _PARAMS_CACHE[arch.name]
 
-TINY_CROSS = ArchConfig(name="tiny-cross", family="vlm", n_layers=4,
-                        d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
-                        vocab=256, frontend="vision", n_img_tokens=8,
-                        pattern=(Segment(("attn", "cross_attn"), 2),),
-                        dtype="float32", param_dtype="float32")
+
+def _run_scenario(name, mesh, **engine_kw):
+    arch, reqs, slots, max_len = scenario_requests(name)
+    eng = ContinuousBatchingEngine(arch, _params_for(arch), mesh,
+                                   slots=slots, max_len=max_len, **engine_kw)
+    for rid, prompt, max_new in reqs:
+        eng.submit(Request(id=rid, prompt=prompt.copy(),
+                           max_new_tokens=max_new))
+    eng.run_until_drained()
+    return eng, {r.id: r.out_tokens for r in eng.completed}
 
 
 # ---------------------------------------------------------------------------
@@ -101,13 +104,38 @@ def test_blocks_for():
 
 def test_paged_cache_specs_match_pool_tree():
     mesh = make_host_mesh()
-    for arch in (TINY, TINY_HYBRID, TINY_CROSS, TINY_SSM):
+    for arch in (TINY, TINY_HYBRID, TINY_CROSS, TINY_SSM, TINY_SHARED,
+                 TINY_ENCDEC, TINY_MLA):
         plan = AdaptiveScheduler(faithful=False).plan(
             arch, ShapeSpec("serve", 64, 2, "decode"), mesh_shape_of(mesh))
         pools = T.init_paged_cache(arch, 8, 4, np.float32, slots=2)
         specs = plan.paged_cache_specs()
         assert jax.tree.structure(pools) == jax.tree.structure(specs), \
             arch.name
+
+
+def test_check_servable_accepts_every_registry_arch():
+    """The continuous engine serves every config in the zoo — zamba2's
+    weight-shared block, whisper's encoder-decoder and deepseek's MLA
+    included; check_servable only rejects kinds the serving cache layer has
+    never seen."""
+    for arch in ARCHS.values():
+        check_servable(arch)                  # must not raise
+    for arch in ARCH_BY_KEY.values():
+        check_servable(arch)
+    bogus = ArchConfig(name="tiny-unknown", family="dense", n_layers=1,
+                       d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
+                       vocab=256, pattern=(Segment(("enc_attn",), 1),),
+                       dtype="float32", param_dtype="float32")
+    with pytest.raises(ValueError, match="enc_attn"):
+        check_servable(bogus)
+    # an encoder arch whose pattern has no wdec block would silently serve
+    # raw (un-encoded) frontend projections — must be rejected up front
+    import dataclasses
+    no_wdec = dataclasses.replace(TINY_CROSS, name="tiny-enc-no-wdec",
+                                  encoder=TINY_ENCDEC.encoder)
+    with pytest.raises(ValueError, match="wdec"):
+        check_servable(no_wdec)
 
 
 def test_unified_cache_manager_slot_rows():
@@ -131,6 +159,19 @@ def test_unified_cache_manager_slot_rows():
     with pytest.raises(ValueError, match="slots"):
         UnifiedCacheManager(TINY_HYBRID,
                             PagedCacheConfig(4, 9, 4), dtype=np.float32)
+
+
+def test_wdec_pool_carries_both_state_classes():
+    """whisper's wdec block pages its self-attn KV and slot-indexes its
+    per-request encoder cross K/V."""
+    mgr = UnifiedCacheManager(
+        TINY_ENCDEC, PagedCacheConfig(block_size=4, num_blocks=9,
+                                      max_blocks_per_seq=4, slots=2),
+        dtype=np.float32)
+    assert mgr.slot_state_kinds == ["wdec"]
+    pool = mgr.pools[0]["b0"]
+    assert pool["self"]["k"].shape[1] == 9         # (repeat, NB, BS, H, D)
+    assert pool["cross"]["k"].shape[1:3] == (3, 8)  # (slots+1, enc_len)
 
 
 # ---------------------------------------------------------------------------
@@ -166,6 +207,57 @@ def test_scheduler_token_budget_blocks_admission():
         s.submit(_req(3, plen=40, max_new=4))
 
 
+def test_scheduler_footprint_capped_at_max_len():
+    """Regression: the scheduler charged len(prompt) + max_new_tokens
+    uncapped while the engine truncates every request to max_len, so a
+    long-prompt request over-charged the budget and stalled admission.
+    With the cap threaded through, a budget sized for capped footprints
+    admits them."""
+    s = RequestScheduler(max_tokens_in_flight=40, footprint_cap=32)
+    # uncapped footprint 20 + 30 = 50 > 40 -> would have been rejected at
+    # submit; capped at 32 it fits the budget
+    s.submit(_req(0, plen=20, max_new=30))
+    assert s._footprint(_req(0, plen=20, max_new=30)) == 32
+    assert s.next_admission().id == 0
+    # a second capped request must NOT be admitted (32 + 32 > 40) ...
+    s.submit(_req(1, plen=20, max_new=30))
+    assert s.next_admission() is None
+    # ... and accounting symmetry: finish releases exactly the capped charge
+    s.on_finish(_req(0, plen=20, max_new=30))
+    assert s.next_admission().id == 1
+
+    # the engine threads its max_len into a default scheduler
+    mesh = make_host_mesh()
+    eng = ContinuousBatchingEngine(
+        TINY, _params_for(TINY), mesh, slots=2, max_len=32, block_size=4,
+        prefill_chunk=8, scheduler=RequestScheduler(max_tokens_in_flight=40))
+    assert eng.scheduler.footprint_cap == 32
+    eng.submit(Request(id=0, prompt=np.arange(1, 21, dtype=np.int32),
+                       max_new_tokens=30))
+    eng.run_until_drained()
+    assert len(eng.completed) == 1
+    assert len(eng.completed[0].out_tokens) == 12   # truncated at max_len
+    # the engine OWNS the cap: a scheduler reused with a second engine must
+    # pick up that engine's max_len, not keep the first one's stale cap
+    eng2 = ContinuousBatchingEngine(TINY, _params_for(TINY), mesh, slots=2,
+                                    max_len=16, block_size=4,
+                                    prefill_chunk=8, scheduler=eng.scheduler)
+    assert eng2.scheduler.footprint_cap == 16
+
+
+def test_scheduler_releases_exactly_the_charged_footprint():
+    """Regression: a cap change while a request is in flight must not leak
+    budget — on_finish releases the footprint charged at admission, not a
+    re-computed one under the new cap."""
+    s = RequestScheduler(max_tokens_in_flight=40, footprint_cap=32)
+    r = _req(0, plen=20, max_new=30)          # charged min(50, 32) = 32
+    s.submit(r)
+    assert s.next_admission() is r
+    s.footprint_cap = 16                      # e.g. reused with a new engine
+    s.on_finish(r)                            # releases the recorded 32
+    assert s._in_flight_tokens == 0
+
+
 def test_scheduler_preemption_victim_and_requeue_order():
     s = RequestScheduler()
     for i in range(3):
@@ -184,50 +276,48 @@ def test_scheduler_preemption_victim_and_requeue_order():
 
 
 # ---------------------------------------------------------------------------
-# engine
+# engine: greedy parity against the pre-shim wave goldens
 # ---------------------------------------------------------------------------
 
-def _wave_outputs(params, mesh, prompts, max_new, arch=TINY):
-    srv = Server(arch, params, mesh, slots=2, max_len=64)
-    for i, p in enumerate(prompts):
-        srv.submit(WaveRequest(id=i, prompt=p.copy(), max_new_tokens=max_new))
-    srv.run_until_drained()
-    return {r.id: r.out_tokens for r in srv.completed}
+# every arch family, with chunked prefill (chunk < prompt) and slot churn
+PARITY_CASES = [
+    ("tiny/base",   dict(block_size=4, prefill_chunk=3)),
+    ("ssm/base",    dict(block_size=4, prefill_chunk=3)),
+    ("hybrid/base", dict(block_size=4, prefill_chunk=4)),
+    ("cross/base",  dict(block_size=4, prefill_chunk=4)),
+    ("shared/base", dict(block_size=4, prefill_chunk=3)),
+    ("encdec/base", dict(block_size=4, prefill_chunk=3)),
+    ("mla/base",    dict(block_size=4, prefill_chunk=3)),
+]
 
 
-def test_continuous_engine_greedy_parity_with_wave():
+@pytest.mark.parametrize("scenario,kw", PARITY_CASES,
+                         ids=[c[0] for c in PARITY_CASES])
+def test_greedy_parity_with_wave_goldens(scenario, kw):
     mesh = make_host_mesh()
-    params = T.init_lm(jax.random.PRNGKey(0), TINY)
-    prompts = [np.arange(1, 9, dtype=np.int32) + i for i in range(5)]
-    wave = _wave_outputs(params, mesh, prompts, max_new=6)
-
-    # chunked prefill (chunk 3 < prompt 8) + slot churn (5 reqs, 2 slots)
-    eng = ContinuousBatchingEngine(TINY, params, mesh, slots=2, max_len=64,
-                                   block_size=4, prefill_chunk=3)
-    for i, p in enumerate(prompts):
-        eng.submit(Request(id=i, prompt=p.copy(), max_new_tokens=6))
-    eng.run_until_drained()
-    cont = {r.id: r.out_tokens for r in eng.completed}
-    assert cont == wave                       # token-for-token
-    assert eng.metrics.summary()["completed"] == 5
+    eng, got = _run_scenario(scenario, mesh, **kw)
+    assert got == load_goldens(scenario), scenario
     assert eng.cache.allocator.num_used == 0  # every block returned
+    assert eng.metrics.summary()["completed"] == len(got)
 
 
-def test_continuous_engine_parity_under_preemption():
+# tiny block pools force recompute-preemption mid-decode; the resume must
+# rebuild paged KV, SSM slot state, latent pools and cross K/V exactly
+PREEMPT_CASES = [
+    ("tiny/preempt",   dict(block_size=4, num_blocks=8, prefill_chunk=8)),
+    ("hybrid/preempt", dict(block_size=4, num_blocks=8, prefill_chunk=8)),
+    ("shared/preempt", dict(block_size=4, num_blocks=8, prefill_chunk=8)),
+    ("encdec/preempt", dict(block_size=4, num_blocks=8, prefill_chunk=8)),
+    ("mla/preempt",    dict(block_size=4, num_blocks=8, prefill_chunk=8)),
+]
+
+
+@pytest.mark.parametrize("scenario,kw", PREEMPT_CASES,
+                         ids=[c[0] for c in PREEMPT_CASES])
+def test_parity_under_forced_preemption(scenario, kw):
     mesh = make_host_mesh()
-    params = T.init_lm(jax.random.PRNGKey(0), TINY)
-    prompts = [np.arange(1, 9, dtype=np.int32) + i for i in range(4)]
-    wave = _wave_outputs(params, mesh, prompts, max_new=8)
-
-    # 7 usable blocks * 4 tokens < 2 slots * 16 tokens -> cache pressure
-    eng = ContinuousBatchingEngine(TINY, params, mesh, slots=2, max_len=64,
-                                   block_size=4, num_blocks=8,
-                                   prefill_chunk=8)
-    for i, p in enumerate(prompts):
-        eng.submit(Request(id=i, prompt=p.copy(), max_new_tokens=8))
-    eng.run_until_drained()
-    cont = {r.id: r.out_tokens for r in eng.completed}
-    assert cont == wave                       # recompute-preemption is exact
+    eng, got = _run_scenario(scenario, mesh, **kw)
+    assert got == load_goldens(scenario), scenario
     assert eng.metrics.preemptions > 0
     assert eng.cache.allocator.num_used == 0
 
@@ -237,57 +327,29 @@ def test_parity_with_multiple_victims_in_one_step():
     grab must be skipped by the rest of that decode step (slot.req is None).
     4 decoding slots x 2 blocks each > 6 usable blocks forces it."""
     mesh = make_host_mesh()
-    params = T.init_lm(jax.random.PRNGKey(0), TINY)
-    prompts = [np.arange(1, 17, dtype=np.int32) + i for i in range(6)]
-    srv = Server(TINY, params, mesh, slots=4, max_len=64)
-    for i, p in enumerate(prompts):
-        srv.submit(WaveRequest(id=i, prompt=p.copy(), max_new_tokens=8))
-    srv.run_until_drained()
-    wave = {r.id: r.out_tokens for r in srv.completed}
-
-    eng = ContinuousBatchingEngine(TINY, params, mesh, slots=4, max_len=64,
-                                   block_size=16, num_blocks=7,
-                                   prefill_chunk=16)
-    for i, p in enumerate(prompts):
-        eng.submit(Request(id=i, prompt=p.copy(), max_new_tokens=8))
-    eng.run_until_drained()
-    assert {r.id: r.out_tokens for r in eng.completed} == wave
+    eng, got = _run_scenario("tiny/victims", mesh, block_size=16,
+                             num_blocks=7, prefill_chunk=16)
+    assert got == load_goldens("tiny/victims")
     assert eng.metrics.preemptions > 0
 
 
 def test_parity_with_mixed_max_new_tokens():
-    """Regression: the wave Server's decode bound must follow the *active*
-    requests — with mixed max_new a finished slot 0 used to let longer
-    requests decode past max_len into a clamped (corrupting) cache write.
-    Both engines must truncate the long request identically."""
+    """Regression: with mixed max_new the longer request must truncate at
+    max_len exactly where the wave Server did (golden req 1: 4 of its 20
+    requested tokens at max_len=12)."""
     mesh = make_host_mesh()
-    params = T.init_lm(jax.random.PRNGKey(0), TINY)
-    prompts = [np.arange(1, 9, dtype=np.int32) + i for i in range(2)]
-    max_news = [2, 20]                        # 8 + 20 > max_len=12
-    srv = Server(TINY, params, mesh, slots=2, max_len=12)
-    for i, p in enumerate(prompts):
-        srv.submit(WaveRequest(id=i, prompt=p.copy(),
-                               max_new_tokens=max_news[i]))
-    srv.run_until_drained()
-    wave = {r.id: r.out_tokens for r in srv.completed}
-    assert len(wave[1]) <= 12 - 8             # truncated at max_len
-
-    eng = ContinuousBatchingEngine(TINY, params, mesh, slots=2, max_len=12,
-                                   block_size=4, prefill_chunk=8)
-    for i, p in enumerate(prompts):
-        eng.submit(Request(id=i, prompt=p.copy(),
-                           max_new_tokens=max_news[i]))
-    eng.run_until_drained()
-    assert {r.id: r.out_tokens for r in eng.completed} == wave
+    _, got = _run_scenario("tiny/mixed", mesh, block_size=4, prefill_chunk=8)
+    want = load_goldens("tiny/mixed")
+    assert len(want[1]) == 4                  # truncated: 12 - 8
+    assert got == want
 
 
 def test_prefill_serves_oldest_request_first():
     """Regression: chunked prefill must advance the oldest admitted request
     (scheduler FCFS seq), not the lowest slot index."""
     mesh = make_host_mesh()
-    params = T.init_lm(jax.random.PRNGKey(0), TINY)
-    eng = ContinuousBatchingEngine(TINY, params, mesh, slots=2, max_len=64,
-                                   block_size=4, prefill_chunk=2)
+    eng = ContinuousBatchingEngine(TINY, _params_for(TINY), mesh, slots=2,
+                                   max_len=64, block_size=4, prefill_chunk=2)
     older, newer = _req(0, plen=8), _req(1, plen=8)
     eng.submit(older)
     eng.submit(newer)
@@ -300,59 +362,9 @@ def test_prefill_serves_oldest_request_first():
     assert eng.slots[0].prefill_pos == 0      # newer waits
 
 
-def test_hybrid_and_cross_parity_with_wave():
-    """Slot-state serving: hybrid attn+SSM and cross-attn configs decode
-    token-for-token like the wave Server, through chunked prefill (chunk <
-    prompt) and slot churn (more requests than slots)."""
-    mesh = make_host_mesh()
-    for arch in (TINY_HYBRID, TINY_CROSS):
-        params = T.init_lm(jax.random.PRNGKey(0), arch)
-        prompts = [np.arange(1, 9, dtype=np.int32) + i for i in range(4)]
-        wave = _wave_outputs(params, mesh, prompts, max_new=6, arch=arch)
-        eng = ContinuousBatchingEngine(arch, params, mesh, slots=2,
-                                       max_len=64, block_size=4,
-                                       prefill_chunk=4)
-        for i, p in enumerate(prompts):
-            eng.submit(Request(id=i, prompt=p.copy(), max_new_tokens=6))
-        eng.run_until_drained()
-        assert {r.id: r.out_tokens for r in eng.completed} == wave, arch.name
-        assert eng.cache.allocator.num_used == 0
-
-
-def test_hybrid_parity_under_preemption():
-    """Forced preemption (tiny block pool) on the hybrid config: the
-    recompute-style resume must rebuild the SSM slot state exactly —
-    re-admission zeroes the row and the re-prefill replays prompt+generated
-    through the chunked scan with h0 carried."""
-    mesh = make_host_mesh()
-    params = T.init_lm(jax.random.PRNGKey(0), TINY_HYBRID)
-    prompts = [np.arange(1, 9, dtype=np.int32) + i for i in range(4)]
-    wave = _wave_outputs(params, mesh, prompts, max_new=8, arch=TINY_HYBRID)
-    eng = ContinuousBatchingEngine(TINY_HYBRID, params, mesh, slots=2,
-                                   max_len=64, block_size=4, num_blocks=8,
-                                   prefill_chunk=8)
-    for i, p in enumerate(prompts):
-        eng.submit(Request(id=i, prompt=p.copy(), max_new_tokens=8))
-    eng.run_until_drained()
-    assert {r.id: r.out_tokens for r in eng.completed} == wave
-    assert eng.metrics.preemptions > 0
-    assert eng.cache.allocator.num_used == 0
-
-
-def test_pure_ssm_parity_with_wave():
-    """mamba2-only arch (no attention KV at all): served via slot-state
-    pools alone."""
-    mesh = make_host_mesh()
-    params = T.init_lm(jax.random.PRNGKey(0), TINY_SSM)
-    prompts = [np.arange(1, 9, dtype=np.int32) + i for i in range(3)]
-    wave = _wave_outputs(params, mesh, prompts, max_new=6, arch=TINY_SSM)
-    eng = ContinuousBatchingEngine(TINY_SSM, params, mesh, slots=2,
-                                   max_len=64, block_size=4, prefill_chunk=3)
-    for i, p in enumerate(prompts):
-        eng.submit(Request(id=i, prompt=p.copy(), max_new_tokens=6))
-    eng.run_until_drained()
-    assert {r.id: r.out_tokens for r in eng.completed} == wave
-
+# ---------------------------------------------------------------------------
+# per-request frontends consumed once at admission
+# ---------------------------------------------------------------------------
 
 def test_cross_kv_computed_once_at_admission():
     """A request carrying frontend embeddings gets its cross K/V projected
@@ -393,15 +405,68 @@ def test_cross_kv_computed_once_at_admission():
     assert with_fe != text_only
 
 
+def test_whisper_encoder_runs_once_at_admission():
+    """An audio request's frame embeddings run through the encoder stack
+    exactly once, at admission: the resulting cross K/V lands in the slot's
+    wdec rows (exact content check), and the decoder's logits demonstrably
+    read those rows (they shift vs the text-only zero-K/V serve — the tiny
+    model's layernormed encoder output is O(1), so asserting on logits, not
+    argmax, keeps the check robust)."""
+    mesh = make_host_mesh()
+    params = _params_for(TINY_ENCDEC)
+    enc_len = TINY_ENCDEC.encoder.seq_len
+    fe = np.asarray(20 * jax.random.normal(jax.random.PRNGKey(5),
+                                           (1, enc_len, 64)), np.float32)
+    prompt = np.arange(1, 7, dtype=np.int32)
+
+    def logits_after_admit(frontend):
+        """Admit (encoder runs here, once), snapshot slot 0's cross-K row,
+        then run the jitted prefill on the post-admission pools (it donates
+        the cache, hence the snapshot first) and return its logits."""
+        eng = ContinuousBatchingEngine(TINY_ENCDEC, params, mesh, slots=2,
+                                       max_len=32, block_size=4,
+                                       prefill_chunk=8)
+        eng.submit(Request(id=0, prompt=prompt.copy(), max_new_tokens=4,
+                           frontend=frontend))
+        eng._admit()
+        k_row = np.asarray(eng.cache.pools[0]["b0"]["cross"]["k"][0, 0])
+        slot = eng.slots[0]
+        ctx = slot.req.context()
+        chunk = np.concatenate([ctx, np.zeros(8 - len(ctx), np.int32)])
+        table = eng.cache.table_array([slot.req.id])
+        logits, eng.cache.pools = eng._prefill(
+            eng.params, eng.cache.pools, jnp.asarray(chunk[None, :]),
+            jnp.asarray([0], jnp.int32), jnp.asarray(table),
+            jnp.asarray([len(ctx)], jnp.int32),
+            jnp.asarray([slot.idx], jnp.int32))
+        return k_row, np.asarray(logits)
+
+    k_row, with_fe = logits_after_admit(fe)
+    # slot 0's cross-K rows equal projecting the encoder output directly
+    from repro.models import blocks as B
+    enc_out = T.encode_frontend(params, TINY_ENCDEC, jnp.asarray(fe))[0]
+    cfg = B.attn_cfg_for(TINY_ENCDEC, causal=False, use_rope=False)
+    x0 = jax.tree.map(lambda t: t[0], params["segments"][0]["b0"]["xattn"])
+    k_ref = L.dense(x0["wk"], enc_out).reshape(enc_len, cfg.n_kv_heads,
+                                               cfg.head_dim)
+    np.testing.assert_allclose(k_row, np.asarray(k_ref), rtol=1e-5,
+                               atol=1e-5)
+    _, text_only = logits_after_admit(None)
+    assert np.abs(with_fe - text_only).max() > 0.1   # decoder reads the rows
+
+
+# ---------------------------------------------------------------------------
+# submit-time validation
+# ---------------------------------------------------------------------------
+
 def test_submit_rejects_duplicate_ids_and_empty_prompts():
     """Regression: block tables are keyed by request id, so a duplicate
     in-flight id silently shared (and corrupted) the live request's table;
     an empty prompt crashed the prefill with a KeyError.  Both must be
     rejected at submit; a finished id may be reused."""
     mesh = make_host_mesh()
-    params = T.init_lm(jax.random.PRNGKey(0), TINY)
-    eng = ContinuousBatchingEngine(TINY, params, mesh, slots=2, max_len=64,
-                                   block_size=4, prefill_chunk=8)
+    eng = ContinuousBatchingEngine(TINY, _params_for(TINY), mesh, slots=2,
+                                   max_len=64, block_size=4, prefill_chunk=8)
     eng.submit(Request(id=7, prompt=np.arange(1, 5, dtype=np.int32),
                        max_new_tokens=2))
     with pytest.raises(ValueError, match="already in flight"):
@@ -416,27 +481,46 @@ def test_submit_rejects_duplicate_ids_and_empty_prompts():
     assert len(eng.completed) == 2
 
 
-def test_engine_rejects_excluded_archs_with_precise_error():
-    """zamba2's weight-shared block and whisper's enc-dec stay wave-only;
-    the error says why and points at the wave Server."""
+def test_submit_rejects_zero_max_new_tokens():
+    """Regression: a max_new_tokens=0 request still generated one token —
+    the prefill path unconditionally samples after the final chunk.  Policy:
+    reject at submit (consistently enforced for the Server shim too, which
+    delegates here)."""
     mesh = make_host_mesh()
-    shared = ArchConfig(name="tiny-shared", family="hybrid", n_layers=2,
-                        d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
-                        vocab=256,
-                        ssm=SSMSpec(d_state=16, head_dim=16, chunk=16),
-                        pattern=(Segment(("shared_attn", "mamba2"), 1),),
-                        dtype="float32", param_dtype="float32")
-    with pytest.raises(ValueError, match="shared.*wave|wave.*shared"):
-        ContinuousBatchingEngine(shared, None, mesh)
-    encdec = ArchConfig(name="tiny-encdec", family="audio", n_layers=2,
-                        d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
-                        vocab=256, pattern=(Segment(("wdec",), 2),),
-                        encoder=EncoderSpec(n_layers=1, seq_len=8, d_ff=128),
-                        frontend="audio", dtype="float32",
-                        param_dtype="float32")
-    with pytest.raises(ValueError, match="wdec|encoder"):
-        ContinuousBatchingEngine(encdec, None, mesh)
+    eng = ContinuousBatchingEngine(TINY, _params_for(TINY), mesh, slots=2,
+                                   max_len=64, block_size=4, prefill_chunk=8)
+    for bad in (0, -3):
+        with pytest.raises(ValueError, match="max_new_tokens"):
+            eng.submit(Request(id=1, prompt=np.arange(1, 5, dtype=np.int32),
+                               max_new_tokens=bad))
+    assert not eng.has_work                   # nothing was enqueued
 
+
+def test_submit_rejects_recycled_request_object():
+    """Regression: a completed Request resubmitted as-is (done=True, stale
+    out_tokens, stale _sched_seq) re-prefilled its old output as context and
+    jumped the FCFS queue with its original arrival seq."""
+    mesh = make_host_mesh()
+    eng = ContinuousBatchingEngine(TINY, _params_for(TINY), mesh, slots=2,
+                                   max_len=64, block_size=4, prefill_chunk=8)
+    req = Request(id=0, prompt=np.arange(1, 5, dtype=np.int32),
+                  max_new_tokens=2)
+    eng.submit(req)
+    eng.run_until_drained()
+    assert req.done
+    with pytest.raises(ValueError, match="already been served"):
+        eng.submit(req)
+    # a half-stale object (tokens but not done) is just as corrupt
+    stale = Request(id=1, prompt=np.arange(1, 5, dtype=np.int32),
+                    max_new_tokens=2, out_tokens=[9])
+    with pytest.raises(ValueError, match="already been served"):
+        eng.submit(stale)
+    assert not eng.has_work
+
+
+# ---------------------------------------------------------------------------
+# numerics regressions
+# ---------------------------------------------------------------------------
 
 def test_short_prompt_mamba2_handoff():
     """Regression: a prompt shorter than d_conv-1 used to under-fill the
@@ -444,19 +528,20 @@ def test_short_prompt_mamba2_handoff():
     rows).  A 1-token prompt must decode, and greedily continuing from a
     2-token prompt must reproduce the same stream (exact handoff state)."""
     mesh = make_host_mesh()
-    params = T.init_lm(jax.random.PRNGKey(0), TINY_SSM)
-    srv = Server(TINY_SSM, params, mesh, slots=1, max_len=32)
-    srv.submit(WaveRequest(id=0, prompt=np.array([5], np.int32),
-                           max_new_tokens=6))
-    srv.run_until_drained()
-    first = srv.completed[0].out_tokens
+    params = _params_for(TINY_SSM)
+
+    def serve(prompt, max_new):
+        eng = ContinuousBatchingEngine(TINY_SSM, params, mesh, slots=1,
+                                       max_len=32, block_size=4,
+                                       prefill_chunk=4)
+        eng.submit(Request(id=0, prompt=prompt, max_new_tokens=max_new))
+        eng.run_until_drained()
+        return eng.completed[0].out_tokens
+
+    first = serve(np.array([5], np.int32), 6)
     assert len(first) == 6
-    srv2 = Server(TINY_SSM, params, mesh, slots=1, max_len=32)
-    srv2.submit(WaveRequest(id=0,
-                            prompt=np.array([5, first[0]], np.int32),
-                            max_new_tokens=5))
-    srv2.run_until_drained()
-    assert srv2.completed[0].out_tokens == first[1:]
+    cont = serve(np.array([5, first[0]], np.int32), 5)
+    assert cont == first[1:]
 
 
 def test_paged_attention_overrun_diverts_to_null_block():
@@ -503,6 +588,122 @@ def test_sinusoidal_odd_d_model():
                                rtol=1e-6)
 
 
+# ---------------------------------------------------------------------------
+# multi-host decode (ROADMAP precondition (b))
+# ---------------------------------------------------------------------------
+
+needs_8_devices = pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8 "
+           "(run by the serving-multihost CI job)")
+
+
+@needs_8_devices
+def test_multihost_decode_parity_and_cache_placement():
+    """Sharded serving proof on an 8-device (data=4, model=2) host mesh:
+    greedy decode stays token-identical to the single-device wave goldens,
+    and every paged/slot-state pool actually lands on the axes its
+    SchedulePlan.paged_cache_specs() declares (at least one pool leaf
+    genuinely sharded over `model`, not everything silently replicated)."""
+    from jax.sharding import NamedSharding
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    sharded_leaves = 0
+    for scenario, kw in [("tiny/base", dict(block_size=4, prefill_chunk=3)),
+                         ("hybrid/base", dict(block_size=4, prefill_chunk=4)),
+                         ("mla/base", dict(block_size=4, prefill_chunk=3))]:
+        arch, reqs, slots, max_len = scenario_requests(scenario)
+        eng = ContinuousBatchingEngine(arch, _params_for(arch), mesh,
+                                       slots=slots, max_len=max_len, **kw)
+        specs = eng.plan.paged_cache_specs()
+        pool_leaves = jax.tree.leaves(eng.cache.pools)
+        spec_leaves = jax.tree.leaves(specs)
+        assert len(pool_leaves) == len(spec_leaves)
+        for leaf, spec in zip(pool_leaves, spec_leaves):
+            want = NamedSharding(mesh, spec)
+            assert leaf.sharding.is_equivalent_to(want, leaf.ndim), \
+                (scenario, spec, leaf.sharding)
+            if any(ax is not None for ax in spec):
+                sharded_leaves += 1
+        for rid, prompt, max_new in reqs:
+            eng.submit(Request(id=rid, prompt=prompt.copy(),
+                               max_new_tokens=max_new))
+        eng.run_until_drained()
+        got = {r.id: r.out_tokens for r in eng.completed}
+        assert got == load_goldens(scenario), scenario
+    assert sharded_leaves > 0
+
+
+@needs_8_devices
+def test_multihost_parity_under_preemption():
+    """Recompute-preemption on the sharded mesh: release/re-admit must not
+    perturb pool placement or greedy outputs."""
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    arch, reqs, slots, max_len = scenario_requests("hybrid/preempt")
+    eng = ContinuousBatchingEngine(arch, _params_for(arch), mesh,
+                                   slots=slots, max_len=max_len,
+                                   block_size=4, num_blocks=8,
+                                   prefill_chunk=8)
+    for rid, prompt, max_new in reqs:
+        eng.submit(Request(id=rid, prompt=prompt.copy(),
+                           max_new_tokens=max_new))
+    eng.run_until_drained()
+    assert {r.id: r.out_tokens for r in eng.completed} \
+        == load_goldens("hybrid/preempt")
+    assert eng.metrics.preemptions > 0
+
+
+# ---------------------------------------------------------------------------
+# the wave Server compatibility shim
+# ---------------------------------------------------------------------------
+
+def test_server_shim_delegates_to_engine():
+    """runtime.server.Server is a deprecation shim: same API, every token
+    now decoded by the continuous engine — outputs must match the pinned
+    pre-shim wave goldens."""
+    from repro.runtime.server import Request as WaveRequest, Server
+    mesh = make_host_mesh()
+    arch, reqs, slots, max_len = scenario_requests("tiny/base")
+    with pytest.deprecated_call():
+        srv = Server(arch, _params_for(arch), mesh, slots=slots,
+                     max_len=max_len)
+    legacy = [WaveRequest(id=rid, prompt=p.copy(), max_new_tokens=mn)
+              for rid, p, mn in reqs]
+    for r in legacy:
+        srv.submit(r)
+    srv.run_until_drained()
+    got = {r.id: r.out_tokens for r in srv.completed}
+    assert got == load_goldens("tiny/base")
+    assert all(r.done for r in legacy)        # caller's objects mutated
+    assert srv.decode_steps > 0
+    # the engine's validation applies through the shim
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        srv.submit(WaveRequest(id=99,
+                               prompt=np.arange(1, 5, dtype=np.int32),
+                               max_new_tokens=0))
+
+
+def test_server_shim_serves_formerly_excluded_archs():
+    """zamba2-shaped and whisper-shaped configs now serve through the shim
+    (they were the wave path's last reason to exist)."""
+    from repro.runtime.server import Request as WaveRequest, Server
+    mesh = make_host_mesh()
+    for scenario in ("shared/base", "encdec/base"):
+        arch, reqs, slots, max_len = scenario_requests(scenario)
+        with pytest.deprecated_call():
+            srv = Server(arch, _params_for(arch), mesh, slots=slots,
+                         max_len=max_len)
+        for rid, p, mn in reqs:
+            srv.submit(WaveRequest(id=rid, prompt=p.copy(),
+                                   max_new_tokens=mn))
+        srv.run_until_drained()
+        got = {r.id: r.out_tokens for r in srv.completed}
+        assert got == load_goldens(scenario), scenario
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+
 def test_metrics_json_report():
     m = ServingMetrics()
     m.on_submit(0, now=0.0)
@@ -520,3 +721,50 @@ def test_metrics_json_report():
     for key in ("ttft_mean_s", "tpot_mean_s", "queue_depth_max",
                 "preemptions", "decode_steps"):
         assert key in rep
+
+
+def test_metrics_preempted_request_keeps_original_ttft():
+    """A preempted-then-finished request reports the TTFT of its FIRST
+    first-token, not the resume's — preemption may not launder latency."""
+    m = ServingMetrics()
+    m.on_submit(0, now=0.0)
+    m.on_first_token(0, now=0.4)
+    m.on_preempt(0)
+    m.on_first_token(0, now=5.0)              # re-prefill samples again
+    m.on_finish(0, n_tokens=6, now=6.0)
+    rep = m.request_report(0)
+    assert rep["ttft_s"] == pytest.approx(0.4)
+    assert m.preemptions == 1
+    # TPOT spans first token -> finish: (6.0 - 0.4) / (6 - 1)
+    assert rep["tpot_s"] == pytest.approx(5.6 / 5)
+
+
+def test_metrics_single_token_request_tpot():
+    """n_tokens=1 has no post-first-token decode: TPOT must not divide by
+    zero, and equals the (zero-length) decode span."""
+    m = ServingMetrics()
+    m.on_submit(0, now=0.0)
+    m.on_first_token(0, now=0.3)
+    m.on_finish(0, n_tokens=1, now=0.3)
+    rep = m.request_report(0)
+    assert rep["tpot_s"] == pytest.approx(0.0)
+    assert rep["ttft_s"] == pytest.approx(0.3)
+
+
+def test_metrics_summary_on_empty_and_partial_runs():
+    """summary() must be total (no ZeroDivision / max-of-empty) on a fresh
+    collector and on a run with submitted-but-unfinished requests."""
+    m = ServingMetrics()
+    s = m.summary()
+    assert s["completed"] == 0 and s["total_tokens"] == 0
+    assert s["tokens_per_sec"] == 0.0 and s["ttft_max_s"] == 0.0
+    assert s["queue_depth_max"] == 0 and s["requests"] == []
+    # partial: one finished, one still in flight
+    m.on_submit(0, now=0.0)
+    m.on_submit(1, now=0.0)
+    m.on_first_token(0, now=0.2)
+    m.on_finish(0, n_tokens=2, now=0.5)
+    s = m.summary()
+    assert s["completed"] == 1                # in-flight req 1 not counted
+    assert [r["id"] for r in s["requests"]] == [0]
+    assert s["total_tokens"] == 2
