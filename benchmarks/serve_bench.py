@@ -10,11 +10,19 @@ whole batch to finish, which is exactly the admission latency the engine's
 what retiring the wave API is worth, not two different decode kernels.
 
 Both rows see the same requests in the same arrival order.  Results
-(throughput, TTFT, TPOT, latency, occupancy, preemptions) land in
-BENCH_serving.json — one row per architecture, covering every serving cache
-class: attention-only (qwen3), pure-SSM slot-state (mamba2), zamba2's
-weight-shared paged block and whisper's encoder-decoder (the two archs the
-engine could not serve before the wave path was retired).
+(throughput, TTFT, TPOT, latency, occupancy, preemptions, block
+utilization) land in BENCH_serving.json — one row per architecture,
+covering every serving cache class: attention-only (qwen3), pure-SSM
+slot-state (mamba2), zamba2's weight-shared paged block and whisper's
+encoder-decoder (the two archs the engine could not serve before the wave
+path was retired).
+
+A final ``prefix_sharing`` row measures cross-request shared-prefix block
+reuse on the attention arch: a Poisson trace whose prompts share a long
+system-prompt prefix, served by the continuous engine with
+``share_prefix`` off vs on.  The sharing row must report a nonzero
+prefix-cache hit rate and materially lower mean TTFT (matched requests
+skip prefilling the shared prefix).
 
   PYTHONPATH=src python benchmarks/serve_bench.py            # smoke-size
   PYTHONPATH=src python benchmarks/serve_bench.py --requests 32 --rate 4
@@ -55,6 +63,23 @@ def make_trace(n: int, rate_hz: float, vocab: int, seed: int = 0):
         max_new = int(rng.choice([4, 8, 16, 32]))
         prompt = rng.integers(1, vocab, size=plen).astype(np.int32)
         trace.append((t, prompt, max_new))
+    return trace
+
+
+def make_shared_prefix_trace(n: int, rate_hz: float, vocab: int,
+                             prefix_len: int, seed: int = 0):
+    """[(arrival_s, prompt, max_new)] — Poisson arrivals whose prompts all
+    start with one ``prefix_len``-token system prompt followed by a short
+    unique user suffix: the workload shape prefix caching exploits."""
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(1, vocab, size=prefix_len).astype(np.int32)
+    t, trace = 0.0, []
+    for _ in range(n):
+        t += rng.exponential(1.0 / rate_hz)
+        suffix = rng.integers(1, vocab,
+                              size=int(rng.choice([4, 8, 12]))).astype(np.int32)
+        max_new = int(rng.choice([4, 8, 16]))
+        trace.append((t, np.concatenate([prefix, suffix]), max_new))
     return trace
 
 
@@ -102,6 +127,7 @@ def bench_wave_shim(arch, params, mesh, trace, *, slots, max_len,
     m = ServingMetrics()
     m.occupancy_samples = em.occupancy_samples
     m.queue_depth_samples = em.queue_depth_samples
+    m.block_utilization_samples = em.block_utilization_samples
     m.preemptions = em.preemptions
     m.engine_steps = em.engine_steps
     m.prefill_chunks = em.prefill_chunks
@@ -120,10 +146,11 @@ def bench_wave_shim(arch, params, mesh, trace, *, slots, max_len,
 
 
 def bench_continuous(arch, params, mesh, trace, *, slots, max_len,
-                     block_size, prefill_chunk):
+                     block_size, prefill_chunk, share_prefix=False):
     eng = ContinuousBatchingEngine(arch, params, mesh, slots=slots,
                                    max_len=max_len, block_size=block_size,
-                                   prefill_chunk=prefill_chunk)
+                                   prefill_chunk=prefill_chunk,
+                                   share_prefix=share_prefix)
     # warm up the jitted steps so rows measure serving, not compilation
     eng.submit(Request(id=len(trace), prompt=np.ones(8, np.int32),
                        max_new_tokens=2))
@@ -179,6 +206,37 @@ def bench_arch(arch_name, args, mesh):
     return row
 
 
+def bench_prefix_sharing(arch_name, args, mesh):
+    """share_prefix off vs on, same shared-prefix trace, same engine knobs:
+    the TTFT ratio isolates what skipping the shared prefill is worth."""
+    arch = reduce_for_smoke(ARCHS[arch_name])
+    params = T.init_lm(jax.random.PRNGKey(0), arch)
+    trace = make_shared_prefix_trace(args.requests, args.rate, arch.vocab,
+                                     args.prefix_len)
+    row = {"arch": arch.name, "trace": {
+        "requests": args.requests, "rate_hz": args.rate,
+        "prefix_len": args.prefix_len,
+        "prompt_lens": sorted({len(p) for _, p, _ in trace})}}
+    for name, share in [("shared_off", False), ("shared_on", True)]:
+        r = bench_continuous(arch, params, mesh, trace, slots=args.slots,
+                             max_len=args.max_len,
+                             block_size=args.block_size,
+                             prefill_chunk=args.prefill_chunk,
+                             share_prefix=share)
+        row[name] = r
+        print(f"[{arch.name}/prefix/{name}] "
+              f"ttft {r['ttft_mean_s']*1e3:.0f}ms "
+              f"tpot {r['tpot_mean_s']*1e3:.1f}ms "
+              f"hit_rate {r['prefix_hit_rate']:.2f} "
+              f"util {r['block_utilization_mean']:.2f}")
+    row["ttft_speedup"] = (row["shared_off"]["ttft_mean_s"]
+                           / max(row["shared_on"]["ttft_mean_s"], 1e-12))
+    row["hit_rate"] = row["shared_on"]["prefix_hit_rate"]
+    print(f"[{arch.name}/prefix] ttft speedup {row['ttft_speedup']:.2f}x "
+          f"hit rate {row['hit_rate']:.2f}")
+    return row
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--archs",
@@ -194,6 +252,12 @@ def main():
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--block-size", type=int, default=16)
     ap.add_argument("--prefill-chunk", type=int, default=32)
+    ap.add_argument("--prefix-arch", default="qwen3-8b",
+                    help="arch for the shared-prefix rows (must be purely "
+                         "paged: attention/MLA kinds only)")
+    ap.add_argument("--prefix-len", type=int, default=64,
+                    help="shared system-prompt length for the prefix-"
+                         "sharing trace (full blocks of it are reused)")
     ap.add_argument("--out", default=str(ROOT / "BENCH_serving.json"))
     args = ap.parse_args()
 
@@ -201,6 +265,8 @@ def main():
     results = {"archs": {}}
     for arch_name in (s.strip() for s in args.archs.split(",")):
         results["archs"][arch_name] = bench_arch(arch_name, args, mesh)
+    results["prefix_sharing"] = bench_prefix_sharing(args.prefix_arch, args,
+                                                     mesh)
     with open(args.out, "w") as f:
         json.dump(results, f, indent=2)
     print(f"-> {args.out}")

@@ -3,8 +3,16 @@ interface, now a deprecation shim — every token below is decoded by
 ``repro.serving.ContinuousBatchingEngine`` (see examples/serve_continuous.py
 and examples/serve_hybrid_archs.py for the engine's own API).
 
+With ``--share-prefix`` the demo instead drives the engine directly on a
+chat-style workload whose prompts share one system prompt: cross-request
+prefix caching hands each later request the cached KV blocks for the
+shared prefix, so its prefill starts at the matched boundary (watch the
+reported hit rate and prefill-chunk count).
+
     PYTHONPATH=src python examples/serve_lm.py
+    PYTHONPATH=src python examples/serve_lm.py --share-prefix
 """
+import argparse
 import pathlib
 import sys
 
@@ -16,13 +24,10 @@ import jax
 from repro.configs import ARCHS, reduce_for_smoke
 from repro.launch.mesh import make_host_mesh
 from repro.models import transformer as T
-from repro.runtime.server import Request, Server
 
 
-def main():
-    arch = reduce_for_smoke(ARCHS["qwen3-8b"])
-    params = T.init_lm(jax.random.PRNGKey(0), arch)
-    mesh = make_host_mesh()
+def serve_legacy(arch, params, mesh):
+    from repro.runtime.server import Request, Server
     server = Server(arch, params, mesh, slots=4, max_len=128)
     print(f"serving {arch.name}: "
           f"{sum(x.size for x in jax.tree.leaves(params)):,} params, "
@@ -39,6 +44,47 @@ def main():
           f"({server.decode_steps} decode steps via the continuous engine)")
     for r in server.completed[:3]:
         print(f"  req {r.id}: {r.out_tokens}")
+
+
+def serve_shared_prefix(arch, params, mesh):
+    from repro.serving import ContinuousBatchingEngine, Request
+    eng = ContinuousBatchingEngine(arch, params, mesh, slots=4, max_len=128,
+                                   block_size=16, prefill_chunk=32,
+                                   share_prefix=True)
+    rng = np.random.default_rng(0)
+    system_prompt = rng.integers(1, arch.vocab, size=64).astype(np.int32)
+    print(f"serving {arch.name} with prefix sharing: 64-token system "
+          f"prompt shared by every request")
+    for i in range(10):
+        user = rng.integers(1, arch.vocab, size=8).astype(np.int32)
+        eng.submit(Request(id=i, prompt=np.concatenate([system_prompt, user]),
+                           max_new_tokens=12))
+    wall = eng.run_until_drained()
+    s = eng.metrics.summary()
+    print(f"completed {s['completed']} requests, {s['total_tokens']} tokens "
+          f"in {wall:.2f}s — prefix hit rate {s['prefix_hit_rate']:.2f}, "
+          f"{s['prefill_chunks']} prefill chunks, "
+          f"mean TTFT {s['ttft_mean_s']*1e3:.0f}ms, "
+          f"block utilization {s['block_utilization_mean']:.2f} mean / "
+          f"{s['block_utilization_max']:.2f} max")
+    print(f"cache: {eng.cache.prefix_stats()}")
+    for r in eng.completed[:3]:
+        print(f"  req {r.id}: {r.out_tokens}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--share-prefix", action="store_true",
+                    help="demo cross-request prefix caching on the engine "
+                         "(shared system prompt, hit rate reported)")
+    args = ap.parse_args()
+    arch = reduce_for_smoke(ARCHS["qwen3-8b"])
+    params = T.init_lm(jax.random.PRNGKey(0), arch)
+    mesh = make_host_mesh()
+    if args.share_prefix:
+        serve_shared_prefix(arch, params, mesh)
+    else:
+        serve_legacy(arch, params, mesh)
 
 
 if __name__ == "__main__":

@@ -14,6 +14,11 @@
 --engine wave        DEPRECATED: the wave decode path was deleted; this now
                      exercises the runtime.server.Server compatibility shim,
                      which delegates every token to the continuous engine.
+--share-prefix       cross-request prefix caching (continuous engine, purely
+                     paged archs only): prompts share a system prefix of
+                     --shared-prefix-len tokens, later requests reuse its
+                     cached blocks and start prefill at the matched boundary;
+                     the report line gains the prefix-cache hit rate.
 """
 from __future__ import annotations
 
@@ -44,6 +49,13 @@ def main():
                     help="prompt tokens prefilled per engine step")
     ap.add_argument("--num-blocks", type=int, default=None,
                     help="physical KV blocks (default: slots*max_len worth)")
+    ap.add_argument("--share-prefix", action="store_true",
+                    help="continuous engine only: reuse cached KV blocks "
+                         "across requests sharing a prompt prefix")
+    ap.add_argument("--shared-prefix-len", type=int, default=None,
+                    help="with --share-prefix: length of the common system "
+                         "prefix prepended to every prompt (default: "
+                         "prompt-len, i.e. suffixes of 4 unique tokens)")
     ap.add_argument("--metrics-out", default=None,
                     help="write the continuous engine's JSON metrics here")
     args = ap.parse_args()
@@ -54,8 +66,16 @@ def main():
     params = T.init_lm(jax.random.PRNGKey(0), arch)
     mesh = make_host_mesh()
     rng = np.random.default_rng(0)
-    prompts = [rng.integers(1, arch.vocab, size=args.prompt_len)
-               .astype(np.int32) for _ in range(args.requests)]
+    if args.share_prefix:
+        plen = (args.prompt_len if args.shared_prefix_len is None
+                else args.shared_prefix_len)
+        shared = rng.integers(1, arch.vocab, size=plen).astype(np.int32)
+        prompts = [np.concatenate(
+            [shared, rng.integers(1, arch.vocab, size=4).astype(np.int32)])
+            for _ in range(args.requests)]
+    else:
+        prompts = [rng.integers(1, arch.vocab, size=args.prompt_len)
+                   .astype(np.int32) for _ in range(args.requests)]
 
     if args.engine == "wave":
         from repro.runtime.server import Request, Server
@@ -79,18 +99,21 @@ def main():
     engine = ContinuousBatchingEngine(
         arch, params, mesh, slots=args.slots, max_len=args.max_len,
         block_size=args.block_size, num_blocks=args.num_blocks,
-        prefill_chunk=args.prefill_chunk)
+        prefill_chunk=args.prefill_chunk, share_prefix=args.share_prefix)
     for i, p in enumerate(prompts):
         engine.submit(Request(id=i, prompt=p, max_new_tokens=args.max_new))
     wall = engine.run_until_drained()
     s = engine.metrics.summary()
+    share = (f", prefix hit rate {s['prefix_hit_rate']:.2f}"
+             if args.share_prefix else "")
     print(f"[continuous] {s['completed']} requests, {s['total_tokens']} "
           f"tokens, {wall:.2f}s wall "
           f"({s['total_tokens'] / max(wall, 1e-9):.1f} tok/s host-wall), "
           f"{s['decode_steps']} decode steps / {s['prefill_chunks']} prefill "
           f"chunks, ttft mean {s['ttft_mean_s']*1e3:.1f}ms, occupancy "
-          f"{s['slot_occupancy_mean']*100:.0f}%, "
-          f"{s['preemptions']} preemptions")
+          f"{s['slot_occupancy_mean']*100:.0f}%, block util "
+          f"{s['block_utilization_mean']:.2f}, "
+          f"{s['preemptions']} preemptions{share}")
     if args.metrics_out:
         engine.metrics.write(args.metrics_out, engine="continuous",
                              arch=arch.name)

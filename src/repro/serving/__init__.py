@@ -1,9 +1,12 @@
 """Continuous-batching serving subsystem.
 
 Layers (bottom up):
-  paged_cache.py    block-pool KV cache: free-list allocator + per-request
-                    block tables over the device pools from
-                    models/transformer.init_paged_cache.
+  paged_cache.py    block-pool KV cache: refcounted free-list allocator +
+                    per-request block tables over the device pools from
+                    models/transformer.init_paged_cache, plus cross-request
+                    shared-prefix block reuse (content-hash chain index
+                    over full blocks, LRU pool of unreferenced-but-cached
+                    blocks evicted before OOM).
   cache_manager.py  the unified cache manager: the paged block pools plus
                     slot-indexed state pools (mamba2 conv/SSM state,
                     cross-attention K/V — one row per engine slot + a
@@ -20,7 +23,11 @@ Layers (bottom up):
                     architecture in the zoo — attention-only, MoE, MLA
                     latent attention, pure-SSM, hybrid, cross-attention,
                     zamba2's weight-shared block and whisper's
-                    encoder-decoder.
+                    encoder-decoder.  ``share_prefix=True`` (purely paged
+                    archs only — slot-state rows are per-request and
+                    excluded) reuses cached blocks across requests with a
+                    shared prompt prefix and starts prefill at the matched
+                    boundary.
 
 The wave-synchronized Server was retired: runtime/server.py is now a thin
 deprecation shim that delegates to this engine (greedy parity with the

@@ -28,6 +28,18 @@ and this module is the single host-side owner of both:
 Both classes share one device pytree (and one SchedulePlan
 paged_cache_specs sharding tree — SSM head axis over `model`, kv-head axis
 over `model`), so the jitted paged steps thread a single donated cache.
+
+Prefix sharing (paged_cache.py ``share_prefix``) applies to the
+length-indexed class ONLY: a paged attention/latent block's KV at position
+i is a pure function of the token prefix, so equal hash chains imply equal
+content and blocks can be handed to a second request.  Slot-state rows are
+the opposite — mamba2's recurrent state is accumulated *by running
+prefill* over every prompt token, so skipping matched tokens would leave
+it wrong, and cross-attn / wdec encoder K/V are per-request admission
+outputs (frontend-dependent) with no content key.  Constructing a
+UnifiedCacheManager with ``share_prefix`` for an arch carrying any
+slot-state kind therefore raises up front rather than serving corrupt
+state.
 """
 from __future__ import annotations
 
@@ -93,6 +105,16 @@ class UnifiedCacheManager(PagedKVCache):
             raise ValueError(f"{arch.name} carries slot-state caches "
                              f"({self.slot_state_kinds}) — cfg.slots must "
                              f"be the engine slot count")
+        if cfg.share_prefix and self.slot_state_kinds:
+            raise ValueError(
+                f"prefix sharing cannot serve {arch.name}: slot-state rows "
+                f"({self.slot_state_kinds}) are per-request — mamba2 "
+                f"recurrent state is built by prefilling every prompt token "
+                f"(a matched prefix would be skipped, leaving it wrong) and "
+                f"cross-attn/wdec K/V are admission-time frontend outputs "
+                f"with no content key.  Only purely paged archs "
+                f"(attention / MLA block kinds) may share; serve this arch "
+                f"with share_prefix=False")
         kw = {} if dtype is None else {"dtype": dtype}
         super().__init__(arch, cfg, mesh=mesh, specs=specs, **kw)
 

@@ -21,13 +21,22 @@ Engine step = admit -> one prefill chunk -> one decode step:
   1. every free slot pulls from the RequestScheduler (priority/FCFS +
      max-tokens budget, footprints capped at max_len) if its prompt's
      blocks fit the pool; admission resets the slot's state-pool rows
-     (make_slot_admit_step);
+     (make_slot_admit_step).  With ``share_prefix`` (purely paged archs
+     only — see serving/cache_manager.py) admission first matches the
+     longest cached full-block prefix of the request context: matched
+     blocks are refcount-shared, prefill starts at the matched boundary
+     (TTFT skips the shared system prompt / few-shot prefix), and full
+     blocks this request writes are committed back to the content index
+     for later requests;
   2. the oldest prefilling request advances one chunk; finishing the prompt
      samples its first token (TTFT);
   3. all decoding slots advance one token.  A slot needing a new block under
-     cache pressure preempts the longest-running request (recompute-style:
-     blocks freed, request requeued with prompt+generated as its new prefill
-     — slot-state needs no checkpoint: re-admission re-zeroes the row).
+     cache pressure first evicts unreferenced prefix-cache blocks, then
+     preempts the request with the largest resident cache footprint
+     (recompute-style: refcounts dropped, request requeued with
+     prompt+generated as its new prefill — slot-state needs no checkpoint:
+     re-admission re-zeroes the row, and a sharing request re-matches its
+     own retired blocks).
 
 Greedy decode is token-for-token identical to the retired wave Server: the
 paged attention paths mask exactly the same prefix (layers._paged_sdpa,
@@ -100,12 +109,14 @@ class ContinuousBatchingEngine:
                  slots: int = 4, max_len: int = 512,
                  block_size: int = 16, num_blocks: Optional[int] = None,
                  prefill_chunk: int = 64,
+                 share_prefix: bool = False,
                  scheduler: Optional[RequestScheduler] = None,
                  asa: Optional[AdaptiveScheduler] = None,
                  metrics: Optional[ServingMetrics] = None):
         check_servable(arch)           # precise error for excluded archs
         self.arch, self.mesh = arch, mesh
         self.max_len, self.prefill_chunk = max_len, prefill_chunk
+        self.share_prefix = share_prefix
         max_blocks_per_seq = blocks_for(max_len, block_size)
         if num_blocks is None:
             num_blocks = slots * max_blocks_per_seq + 1   # +1: null block
@@ -115,7 +126,7 @@ class ContinuousBatchingEngine:
         cdtype = jnp.float32 if arch.dtype == "float32" else jnp.bfloat16
         self.cache = UnifiedCacheManager(
             arch, PagedCacheConfig(block_size, num_blocks, max_blocks_per_seq,
-                                   slots=slots),
+                                   slots=slots, share_prefix=share_prefix),
             dtype=cdtype, mesh=mesh, specs=self.plan.paged_cache_specs())
         self.params = jax.device_put(
             params, jax.tree.map(lambda s: NamedSharding(mesh, s),
@@ -204,8 +215,8 @@ class ContinuousBatchingEngine:
             head = self.scheduler.peek()
             if head is None:
                 break
-            ctx_len = len(head.context())
-            if not self.cache.can_fit(ctx_len):
+            ctx = head.context()
+            if not self.cache.can_fit_request(ctx):
                 if not any(s.busy for s in self.slots):
                     raise RuntimeError(
                         f"request {head.id} cannot fit an empty pool")
@@ -213,10 +224,16 @@ class ContinuousBatchingEngine:
             req = self.scheduler.next_admission()
             if req is None:                # token budget exhausted
                 break
-            ok = self.cache.reserve(req.id, len(req.context()))
-            assert ok, "can_fit passed but reserve failed"
+            # longest cached full-block prefix: refcounts bump, the table
+            # starts populated, and prefill starts at the matched boundary
+            # (no-op with share_prefix off)
+            n_cached = self.cache.assign_prefix(req.id, ctx)
+            ok = self.cache.reserve(req.id, len(ctx))
+            assert ok, "can_fit_request passed but reserve failed"
             slot.req, slot.state = req, "prefill"
-            slot.pos, slot.prefill_pos = 0, 0
+            slot.pos, slot.prefill_pos = n_cached, n_cached
+            if self.share_prefix:
+                self.metrics.on_prefix_match(n_cached, len(ctx))
             if self._admit_slot_state is not None:
                 # reset this slot's state-pool rows (zero mamba2 state;
                 # cross K/V from the request's frontend, computed once)
@@ -250,6 +267,7 @@ class ContinuousBatchingEngine:
             jnp.asarray([slot.idx], jnp.int32))
         slot.prefill_pos += n_new
         slot.pos = slot.prefill_pos
+        self.cache.commit_prefix(req.id, ctx, slot.prefill_pos)
         self.metrics.prefill_chunks += 1
         if slot.prefill_pos == len(ctx):
             nxt = self._sample(logits)
@@ -305,6 +323,13 @@ class ContinuousBatchingEngine:
                 continue
             s.pos += 1
             s.req.out_tokens.append(int(nxt[i]))
+            if self.share_prefix and s.pos % self.cache.cfg.block_size == 0:
+                # a block just filled: generated tokens extend the hash
+                # chain too, so a preempted request re-matches its own
+                # retired blocks at re-admission.  Gated on the boundary —
+                # rebuilding context() every token would be O(n^2) per
+                # request in the decode hot loop
+                self.cache.commit_prefix(s.req.id, s.req.context(), s.pos)
             if len(s.req.prompt) + len(s.req.out_tokens) \
                     >= self._target_total(s.req):
                 self._finish(s)
@@ -315,14 +340,36 @@ class ContinuousBatchingEngine:
         self._prefill_chunk()
         self._decode_step()
         self.metrics.on_step(self.scheduler.queue_depth,
-                             sum(s.busy for s in self.slots), len(self.slots))
+                             sum(s.busy for s in self.slots), len(self.slots),
+                             block_utilization=self.cache.utilization)
 
     @property
     def has_work(self) -> bool:
         return self.scheduler.queue_depth > 0 or any(s.busy for s in self.slots)
 
-    def run_until_drained(self) -> float:
+    def _progress_marker(self) -> tuple:
+        return (self.metrics.prefill_chunks, self.metrics.decode_steps,
+                self.metrics.preemptions, len(self.completed),
+                self.scheduler.queue_depth,
+                sum(s.busy for s in self.slots))
+
+    def run_until_drained(self, *, max_idle_steps: int = 1000) -> float:
+        """Step until no queued or running work remains.  Raises after
+        ``max_idle_steps`` consecutive steps that neither prefill, decode,
+        preempt, finish, admit nor drain anything — a stuck engine (e.g. a
+        token budget that can never re-admit) must fail loudly instead of
+        spinning forever."""
         t0 = time.perf_counter()
+        idle, marker = 0, self._progress_marker()
         while self.has_work:
             self.step()
+            now = self._progress_marker()
+            idle = idle + 1 if now == marker else 0
+            marker = now
+            if idle >= max_idle_steps:
+                raise RuntimeError(
+                    f"engine made no progress for {idle} consecutive steps "
+                    f"({self.scheduler.queue_depth} queued, "
+                    f"{sum(s.busy for s in self.slots)} busy slots) — "
+                    f"admission is wedged")
         return time.perf_counter() - t0

@@ -1,8 +1,17 @@
 """Serving metrics: per-request TTFT/TPOT plus engine-level counters.
 
 All timestamps are caller-supplied ``time.perf_counter()`` floats (the
-engine owns the clock; tests pass synthetic times).  ``to_json()`` emits the
-full report; ``write()`` drops it next to the benchmark outputs.
+engine owns the clock; tests pass synthetic times).  A request that has not
+reached a lifecycle point yet reports ``None`` for the latencies that
+depend on it (an in-flight request has no finish time — subtracting a
+missing timestamp used to fabricate large negative TTFT/TPOT) and is
+skipped by the ``summary()`` means.  ``to_json()`` emits the full report;
+``write()`` drops it next to the benchmark outputs.
+
+Cache pressure: the engine samples ``PagedKVCache.utilization`` every step
+(``block_utilization_mean/max``) and reports prefix-cache admission
+matches (``prefix_hit_rate`` — matched tokens / looked-up context tokens,
+0.0 when sharing is off).
 """
 from __future__ import annotations
 
@@ -23,6 +32,9 @@ class ServingMetrics:
         self.token_counts: dict[int, int] = {}
         self.queue_depth_samples: list[int] = []
         self.occupancy_samples: list[float] = []
+        self.block_utilization_samples: list[float] = []
+        self.prefix_hit_tokens = 0
+        self.prefix_lookup_tokens = 0
         self.preemptions = 0
         self.engine_steps = 0
         self.prefill_chunks = 0
@@ -44,23 +56,43 @@ class ServingMetrics:
     def on_preempt(self, rid: int):
         self.preemptions += 1
 
+    def on_prefix_match(self, hit_tokens: int, lookup_tokens: int):
+        """One admission-time prefix lookup: ``hit_tokens`` of the
+        ``lookup_tokens``-token context were served from cached blocks."""
+        self.prefix_hit_tokens += hit_tokens
+        self.prefix_lookup_tokens += lookup_tokens
+
     # -- engine step --------------------------------------------------------
-    def on_step(self, queue_depth: int, busy_slots: int, slots: int):
+    def on_step(self, queue_depth: int, busy_slots: int, slots: int,
+                block_utilization: Optional[float] = None):
         self.engine_steps += 1
         self.queue_depth_samples.append(queue_depth)
         self.occupancy_samples.append(busy_slots / max(slots, 1))
+        if block_utilization is not None:
+            self.block_utilization_samples.append(block_utilization)
 
     # -- report -------------------------------------------------------------
     def request_report(self, rid: int) -> dict:
-        ttft = self.first_token_t.get(rid, 0.0) - self.submit_t.get(rid, 0.0)
+        """Latency report for one request id.  Missing lifecycle points
+        yield ``None`` (submitted-not-started has no TTFT; started-not-
+        finished has no TPOT) — never a negative latency fabricated from a
+        defaulted timestamp."""
+        submit = self.submit_t.get(rid)
+        first = self.first_token_t.get(rid)
+        finish = self.finish_t.get(rid)
         n = self.token_counts.get(rid, 0)
-        decode_span = (self.finish_t.get(rid, 0.0)
-                       - self.first_token_t.get(rid, 0.0))
-        tpot = decode_span / max(n - 1, 1)   # time-per-output-token after first
+        ttft = None if submit is None or first is None else first - submit
+        if first is None or finish is None:
+            tpot = None
+        else:
+            # time-per-output-token after the first
+            tpot = (finish - first) / max(n - 1, 1)
         return {"id": rid, "n_tokens": n, "ttft_s": ttft, "tpot_s": tpot}
 
     def summary(self) -> dict:
         reqs = [self.request_report(r) for r in sorted(self.finish_t)]
+        ttfts = [r["ttft_s"] for r in reqs if r["ttft_s"] is not None]
+        tpots = [r["tpot_s"] for r in reqs if r["tpot_s"] is not None]
         total_tokens = sum(self.token_counts.values())
         if self.submit_t and self.finish_t:
             span = max(self.finish_t.values()) - min(self.submit_t.values())
@@ -71,12 +103,18 @@ class ServingMetrics:
             "completed": len(self.finish_t),
             "total_tokens": total_tokens,
             "tokens_per_sec": total_tokens / span if span > 0 else 0.0,
-            "ttft_mean_s": _mean([r["ttft_s"] for r in reqs]),
-            "ttft_max_s": max([r["ttft_s"] for r in reqs], default=0.0),
-            "tpot_mean_s": _mean([r["tpot_s"] for r in reqs]),
+            "ttft_mean_s": _mean(ttfts),
+            "ttft_max_s": max(ttfts, default=0.0),
+            "tpot_mean_s": _mean(tpots),
             "queue_depth_mean": _mean(self.queue_depth_samples),
             "queue_depth_max": max(self.queue_depth_samples, default=0),
             "slot_occupancy_mean": _mean(self.occupancy_samples),
+            "block_utilization_mean": _mean(self.block_utilization_samples),
+            "block_utilization_max": max(self.block_utilization_samples,
+                                         default=0.0),
+            "prefix_hit_rate": (self.prefix_hit_tokens
+                                / self.prefix_lookup_tokens
+                                if self.prefix_lookup_tokens else 0.0),
             "preemptions": self.preemptions,
             "engine_steps": self.engine_steps,
             "prefill_chunks": self.prefill_chunks,

@@ -1,14 +1,30 @@
-"""Paged KV cache: fixed-size blocks, free-list allocation, block tables.
+"""Paged KV cache: fixed-size blocks, refcounted free-list allocation,
+block tables, and cross-request shared-prefix block reuse.
 
 The device side is a *physical block pool* per attention layer
 (models/transformer.init_paged_cache — shape (repeat, num_blocks,
 block_size, Hkv, head_dim), no batch axis).  This module is the host side:
-which physical blocks belong to which request, and how many are free.
+which physical blocks belong to which request, how many are free, and —
+with ``share_prefix`` enabled — which blocks hold which *content*.
 
 Block 0 is the reserved **null block**: it is never allocated, idle batch
 slots point every block-table entry at it, and the padded tail of short
 tables also maps there, so stray writes land in a scratch page that no
 live request ever reads (layers.paged_attention masks it out).
+
+Prefix sharing (à la vLLM's prefix caching): every *full* block a request
+has written can be registered in a content index keyed by a hash chain
+over its ``block_size``-token chunks (a block's key commits to the entire
+token prefix up to and including it, so equal keys imply bitwise-equal KV
+for position-independent attention caches).  A later request whose context
+starts with the same chain is handed the same physical blocks at admission
+— reference counts go up, its prefill starts at the matched boundary, and
+no KV is recomputed.  When the last request drops a registered block, it
+is not freed: it retires into an LRU pool of unreferenced-but-cached
+blocks, reusable on a future hash hit and evicted (oldest first) only when
+``reserve`` would otherwise report OOM.  Slot-state rows (mamba2 / cross-
+attn / wdec encoder K/V) are per-request and never shared — see
+serving/cache_manager.py, which rejects ``share_prefix`` for those archs.
 
 Layout respects the ASA plan: ContinuousBatchingEngine device_puts the
 pools with NamedShardings built from SchedulePlan.paged_cache_specs()
@@ -17,6 +33,7 @@ pools with NamedShardings built from SchedulePlan.paged_cache_specs()
 from __future__ import annotations
 
 import dataclasses
+from collections import OrderedDict
 from typing import Optional
 
 import jax
@@ -36,19 +53,22 @@ def blocks_for(n_tokens: int, block_size: int) -> int:
 
 
 class BlockAllocator:
-    """Free-list allocator over physical block ids 1..num_blocks-1.
+    """Refcounted free-list allocator over physical block ids 1..num_blocks-1.
 
     Allocation is all-or-nothing (returns None instead of a partial grant)
     so a request under cache pressure either fits or triggers preemption —
-    it never strands half-allocated pages.  Double-free and foreign-block
-    frees raise: the invariants the serving tests pin down.
+    it never strands half-allocated pages.  Every allocated block carries a
+    reference count (fresh allocations start at 1); ``incref`` lets the
+    prefix index and later requests share a block, and a block returns to
+    the free list only when its count reaches 0.  Double-free and
+    foreign-block frees raise: the invariants the serving tests pin down.
     """
 
     def __init__(self, num_blocks: int):
         assert num_blocks >= 2, "need at least the null block + one real block"
         self.num_blocks = num_blocks
         self._free = list(range(num_blocks - 1, 0, -1))   # pop() -> low ids first
-        self._used: set[int] = set()
+        self._ref: dict[int, int] = {}                    # block -> refcount
 
     @property
     def num_free(self) -> int:
@@ -56,7 +76,10 @@ class BlockAllocator:
 
     @property
     def num_used(self) -> int:
-        return len(self._used)
+        return len(self._ref)
+
+    def refcount(self, block: int) -> int:
+        return self._ref.get(block, 0)
 
     def alloc(self, n: int) -> Optional[list[int]]:
         if n < 0:
@@ -64,17 +87,38 @@ class BlockAllocator:
         if n > len(self._free):
             return None
         blocks = [self._free.pop() for _ in range(n)]
-        self._used.update(blocks)
+        for b in blocks:
+            self._ref[b] = 1
         return blocks
 
+    def incref(self, block: int) -> int:
+        if block == NULL_BLOCK:
+            raise ValueError("cannot reference the null block")
+        if block not in self._ref:
+            raise ValueError(f"incref on unallocated block {block}")
+        self._ref[block] += 1
+        return self._ref[block]
+
+    def decref(self, block: int) -> int:
+        """Drop one reference; at 0 the block returns to the free list.
+        Returns the remaining count."""
+        if block == NULL_BLOCK:
+            raise ValueError("cannot free the null block")
+        if block not in self._ref:
+            raise ValueError(f"double free / foreign block {block}")
+        self._ref[block] -= 1
+        if self._ref[block] == 0:
+            del self._ref[block]
+            self._free.append(block)
+            return 0
+        return self._ref[block]
+
     def free(self, blocks: list[int]) -> None:
+        """Drop one reference per block (legacy bulk API).  A block shared
+        with other holders merely decrements; only the last holder's free
+        returns it to the free list."""
         for b in blocks:
-            if b == NULL_BLOCK:
-                raise ValueError("cannot free the null block")
-            if b not in self._used:
-                raise ValueError(f"double free / foreign block {b}")
-            self._used.remove(b)
-            self._free.append(b)
+            self.decref(b)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -83,6 +127,7 @@ class PagedCacheConfig:
     num_blocks: int            # physical, including the reserved null block
     max_blocks_per_seq: int    # block-table width (= ceil(max_len / bs))
     slots: int = 0             # slot-state pool rows (0: attn-only arch)
+    share_prefix: bool = False  # cross-request full-block prefix reuse
 
 
 class PagedKVCache:
@@ -90,7 +135,13 @@ class PagedKVCache:
 
     With ``cfg.slots`` > 0 the device pytree also carries slot-indexed state
     pools for O(1)-per-request caches; serving/cache_manager.py layers the
-    slot-row bookkeeping on top of this class."""
+    slot-row bookkeeping on top of this class.
+
+    With ``cfg.share_prefix`` the host side additionally keeps the content
+    index (hash chain -> physical block), per-block reference counts beyond
+    1, and the LRU pool of unreferenced-but-cached blocks described in the
+    module docstring.  The device pools are untouched: sharing is pure
+    block-table indirection, invisible to the jitted steps."""
 
     def __init__(self, arch: ArchConfig, cfg: PagedCacheConfig, *,
                  dtype=jnp.bfloat16, mesh=None, specs=None):
@@ -103,15 +154,139 @@ class PagedKVCache:
         self.pools = pools
         self.allocator = BlockAllocator(cfg.num_blocks)
         self.tables: dict[int, list[int]] = {}   # request id -> physical blocks
+        # -- prefix-sharing state (inert unless cfg.share_prefix) -----------
+        # chain key -> block holding that full chunk; key = (prev_key, chunk)
+        # so it commits to the whole token prefix, not just one block's tokens
+        self._hash_to_block: dict[tuple, int] = {}
+        self._block_to_hash: dict[int, tuple] = {}
+        # unreferenced-but-cached blocks, oldest first; each holds exactly
+        # one reference (the index's) until eviction or a new hash hit
+        self._lru: OrderedDict[int, None] = OrderedDict()
+        # rid -> (full blocks committed, chain key of the last one) so each
+        # commit extends the chain instead of rehashing it from block 0
+        self._committed: dict[int, tuple[int, Optional[tuple]]] = {}
+        # counters surfaced through ServingMetrics / serve_bench
+        self.prefix_hit_tokens = 0
+        self.prefix_lookup_tokens = 0
+        self.prefix_evictions = 0
+
+    # -- prefix index -------------------------------------------------------
+    def _chain_keys(self, tokens, start: int, n_blocks: int,
+                    prev: Optional[tuple]) -> list[tuple]:
+        """Chain keys for full blocks [start, n_blocks), extending ``prev``
+        (the key of block start-1, None at the chain head)."""
+        bs = self.cfg.block_size
+        keys = []
+        for i in range(start, n_blocks):
+            chunk = tuple(int(t) for t in tokens[i * bs:(i + 1) * bs])
+            prev = (prev, chunk)
+            keys.append(prev)
+        return keys
+
+    def match_prefix(self, tokens) -> list[int]:
+        """Longest chain of cached full blocks covering a prefix of
+        ``tokens`` — capped at len(tokens)-1 so at least one token is left
+        to prefill (the engine must run the model once to sample the first
+        output token).  No side effects."""
+        if not self.cfg.share_prefix:
+            return []
+        bs = self.cfg.block_size
+        limit = max(len(tokens) - 1, 0) // bs
+        blocks, prev = [], None
+        for i in range(limit):
+            chunk = tuple(int(t) for t in tokens[i * bs:(i + 1) * bs])
+            prev = (prev, chunk)
+            b = self._hash_to_block.get(prev)
+            if b is None:
+                break
+            blocks.append(b)
+        return blocks
+
+    def assign_prefix(self, rid: int, tokens) -> int:
+        """Hand request ``rid`` the cached blocks matching its context
+        prefix: refcounts bump, matched blocks leave the LRU, and the
+        request's table starts populated.  Returns the number of matched
+        tokens (the engine starts prefill there).  Must run before the
+        first ``reserve`` for rid."""
+        if not self.cfg.share_prefix:
+            return 0
+        if rid in self.tables:
+            raise ValueError(f"request {rid} already holds blocks — "
+                             f"assign_prefix must precede reserve")
+        blocks = self.match_prefix(tokens)
+        self.prefix_lookup_tokens += len(tokens)
+        if not blocks:
+            return 0
+        for b in blocks:
+            self.allocator.incref(b)
+            self._lru.pop(b, None)
+        self.tables[rid] = list(blocks)
+        self._committed[rid] = (len(blocks), self._block_to_hash[blocks[-1]])
+        n = len(blocks) * self.cfg.block_size
+        self.prefix_hit_tokens += n
+        return n
+
+    def commit_prefix(self, rid: int, tokens, n_resident: int) -> None:
+        """Register rid's freshly written full blocks in the content index
+        (first writer wins on duplicate content).  ``tokens`` is the
+        request context, of which ``n_resident`` are resident in the cache.
+        The index holds one reference per registered block, so a released
+        block retires into the LRU instead of being freed."""
+        if not self.cfg.share_prefix:
+            return
+        table = self.tables.get(rid)
+        if table is None:
+            return
+        n_full = min(n_resident // self.cfg.block_size, len(table))
+        start, prev = self._committed.get(rid, (0, None))
+        if n_full <= start:
+            return
+        keys = self._chain_keys(tokens, start, n_full, prev)
+        for i, key in zip(range(start, n_full), keys):
+            b = table[i]
+            if b in self._block_to_hash or key in self._hash_to_block:
+                continue                       # already indexed / duplicate
+            self._hash_to_block[key] = b
+            self._block_to_hash[b] = key
+            self.allocator.incref(b)
+        self._committed[rid] = (n_full, keys[-1])
+
+    def _evict_for(self, need: int) -> None:
+        """Evict unreferenced cached blocks (oldest first) until ``need``
+        blocks are free or the LRU is empty.  Referenced blocks are never
+        in the LRU, so live requests are untouched."""
+        while self.allocator.num_free < need and self._lru:
+            b, _ = self._lru.popitem(last=False)
+            key = self._block_to_hash.pop(b)
+            del self._hash_to_block[key]
+            self.allocator.decref(b)           # index's ref: 1 -> 0 -> free
+            self.prefix_evictions += 1
+
+    @property
+    def num_cached(self) -> int:
+        """Unreferenced-but-cached blocks reclaimable by eviction."""
+        return len(self._lru)
+
+    def prefix_stats(self) -> dict:
+        hit = self.prefix_hit_tokens
+        lookup = self.prefix_lookup_tokens
+        return {"hit_tokens": hit, "lookup_tokens": lookup,
+                "hit_rate": hit / lookup if lookup else 0.0,
+                "cached_blocks": self.num_cached,
+                "indexed_blocks": len(self._block_to_hash),
+                "evictions": self.prefix_evictions}
 
     # -- allocation ---------------------------------------------------------
     def reserve(self, rid: int, n_tokens: int) -> bool:
         """Grow request rid's table to cover n_tokens total; False on OOM
-        (state unchanged — caller preempts or defers admission)."""
+        (state unchanged — caller preempts or defers admission).  Cached
+        LRU blocks are evicted before OOM is reported."""
         have = len(self.tables.get(rid, ()))
         need = blocks_for(n_tokens, self.cfg.block_size) - have
         if need <= 0:
             return True
+        if need > self.allocator.num_free:
+            self._evict_for(need)
         got = self.allocator.alloc(need)
         if got is None:
             return False
@@ -119,17 +294,46 @@ class PagedKVCache:
         return True
 
     def release(self, rid: int) -> None:
+        """Drop rid's reference on every block in its table.  A block whose
+        only remaining holder is the content index retires into the LRU
+        (reusable on a future prefix hit); an unindexed block at refcount 0
+        is freed outright.  Retirement is tail-first: eviction pops the LRU
+        oldest-first, and evicting a chain's *head* would break match_prefix
+        at block 0 while its still-cached tail sat unmatchable — sacrificing
+        the tail first keeps the matchable head resident longest."""
         blocks = self.tables.pop(rid, None)
-        if blocks:
-            self.allocator.free(blocks)
+        self._committed.pop(rid, None)
+        if not blocks:
+            return
+        for b in reversed(blocks):
+            remaining = self.allocator.decref(b)
+            if remaining == 1 and b in self._block_to_hash:
+                # the survivor is the index's ref (an LRU block is always at
+                # refcount 1, so b cannot already be resident) — insert at
+                # the MRU end
+                self._lru[b] = None
 
     def can_fit(self, n_tokens: int) -> bool:
-        return blocks_for(n_tokens, self.cfg.block_size) <= self.allocator.num_free
+        return blocks_for(n_tokens, self.cfg.block_size) \
+            <= self.allocator.num_free + len(self._lru)
+
+    def can_fit_request(self, tokens) -> bool:
+        """Admission check for a full context: new blocks needed after
+        prefix matching vs free + evictable (matched blocks are neither)."""
+        matched = self.match_prefix(tokens)
+        need = blocks_for(len(tokens), self.cfg.block_size) - len(matched)
+        evictable = len(self._lru) - sum(1 for b in matched if b in self._lru)
+        return need <= self.allocator.num_free + evictable
 
     @property
     def utilization(self) -> float:
+        """Live cache pressure: blocks held by running requests / usable.
+        Unreferenced LRU-retired prefix-cache blocks are excluded — they
+        are reclaimable on demand, and counting them would make the
+        block_utilization metrics climb toward 1.0 under sharing even with
+        the pool mostly evictable."""
         usable = self.cfg.num_blocks - 1
-        return self.allocator.num_used / max(usable, 1)
+        return (self.allocator.num_used - len(self._lru)) / max(usable, 1)
 
     # -- device-side views --------------------------------------------------
     def table_row(self, rid: Optional[int]) -> np.ndarray:

@@ -11,9 +11,11 @@ Policy:
     request is charged what it can actually consume) would exceed
     ``max_tokens_in_flight``;
   * preemption — under cache pressure the engine asks for a victim: the
-    longest-running request (most generated tokens) in the lowest priority
-    class, which frees the most blocks per preemption and restarts the
-    request that is cheapest to have delayed last.
+    request with the largest resident cache footprint (tokens in cache,
+    ``len(r.context())``) in the lowest priority class, which frees the
+    most blocks per preemption.  Footprint, not generated-token count: a
+    long-prompt request mid-prefill has zero output tokens but may hold
+    more blocks than any decoding request.
 """
 from __future__ import annotations
 
@@ -87,10 +89,17 @@ class RequestScheduler:
 
     # -- preemption ---------------------------------------------------------
     def pick_preemption_victim(self, running: list):
-        """Longest-running request in the lowest priority class, or None."""
+        """Largest-resident-footprint request in the lowest priority class,
+        or None.  len(context()) = prompt + generated = tokens in cache, so
+        this frees the most blocks per preemption; ranking by generated
+        tokens alone put a long-prompt mid-prefill request (0 output
+        tokens, many resident blocks) last."""
         if not running:
             return None
-        return max(running, key=lambda r: (r.priority, len(r.out_tokens),
+        # len(prompt) + len(out_tokens) == len(context()) without the O(n)
+        # concatenation — this runs per candidate on the pressure hot path
+        return max(running, key=lambda r: (r.priority,
+                                           len(r.prompt) + len(r.out_tokens),
                                            r._sched_seq))
 
     def preempt(self, req) -> None:

@@ -75,6 +75,27 @@ def test_block_allocator_invariants():
     assert again is not None and set(got[:2]) <= set(again)
 
 
+def test_block_allocator_refcount_invariants():
+    """Shared blocks: freed only at refcount 0; incref on unallocated /
+    null blocks raises; double free still raises after the last ref."""
+    a = BlockAllocator(8)
+    (b,) = a.alloc(1)
+    assert a.refcount(b) == 1
+    assert a.incref(b) == 2
+    a.free([b])                               # one holder drops out
+    assert a.refcount(b) == 1 and a.num_free == 6   # NOT freed yet
+    assert a.decref(b) == 0                   # last holder -> free list
+    assert a.num_free == 7 and a.refcount(b) == 0
+    with pytest.raises(ValueError):           # double free
+        a.decref(b)
+    with pytest.raises(ValueError):           # incref on a free block
+        a.incref(b)
+    with pytest.raises(ValueError):           # null block is never refable
+        a.incref(NULL_BLOCK)
+    with pytest.raises(ValueError):
+        a.decref(NULL_BLOCK)
+
+
 def test_paged_cache_reserve_release_reuse():
     cache = PagedKVCache(TINY, PagedCacheConfig(block_size=4, num_blocks=9,
                                                 max_blocks_per_seq=4),
@@ -100,6 +121,130 @@ def test_blocks_for():
     assert blocks_for(1, 4) == 1
     assert blocks_for(4, 4) == 1
     assert blocks_for(5, 4) == 2
+
+
+# ---------------------------------------------------------------------------
+# shared-prefix block reuse (host-side cache semantics)
+# ---------------------------------------------------------------------------
+
+def _prefix_cache(num_blocks=9, block_size=4, mbps=6):
+    return PagedKVCache(TINY, PagedCacheConfig(block_size, num_blocks, mbps,
+                                               share_prefix=True),
+                        dtype=np.float32)
+
+
+def test_prefix_match_assign_and_refcounts():
+    cache = _prefix_cache()
+    toks = np.arange(1, 13, dtype=np.int32)        # 3 full blocks
+    assert cache.reserve(0, 12)
+    cache.commit_prefix(0, toks, 12)               # request 0 wrote them
+    t0 = list(cache.tables[0])
+    assert all(cache.allocator.refcount(b) == 2 for b in t0)  # req + index
+    # a second request with the same prefix + a private tail shares them
+    toks2 = np.concatenate([toks, np.asarray([99, 98], np.int32)])
+    assert cache.match_prefix(toks2) == t0
+    n = cache.assign_prefix(1, toks2)
+    assert n == 12 and cache.tables[1] == t0
+    assert all(cache.allocator.refcount(b) == 3 for b in t0)
+    assert cache.reserve(1, len(toks2))            # grows by one private block
+    assert cache.tables[1][:3] == t0 and len(cache.tables[1]) == 4
+    # releases peel references one at a time; blocks free only at zero
+    cache.release(0)
+    assert all(cache.allocator.refcount(b) == 2 for b in t0)
+    assert cache.num_cached == 0                   # still referenced by req 1
+    cache.release(1)
+    assert all(cache.allocator.refcount(b) == 1 for b in t0)  # index holds
+    assert cache.num_cached == 3                   # retired into the LRU
+    # an identical context re-matches the retired blocks out of the LRU
+    assert cache.assign_prefix(2, toks2) == 12
+    assert cache.num_cached == 0
+    assert cache.prefix_stats()["hit_rate"] > 0
+
+
+def test_prefix_match_requires_full_blocks_and_leaves_one_token():
+    cache = _prefix_cache()
+    toks = np.arange(1, 11, dtype=np.int32)        # 2 full blocks + 2 spare
+    cache.reserve(0, 10)
+    cache.commit_prefix(0, toks, 10)               # only 2 full blocks indexed
+    assert len(cache.match_prefix(toks)) == 2
+    # a context that IS exactly the cached blocks must leave >= 1 token to
+    # prefill (the engine needs logits to sample the first output token)
+    assert len(cache.match_prefix(toks[:8])) == 1
+    # partial-block prefix: no match below one full block
+    assert cache.match_prefix(toks[:3]) == []
+    # different first block: chain breaks immediately
+    other = toks.copy(); other[0] = 77
+    assert cache.match_prefix(other) == []
+
+
+def test_prefix_lru_eviction_before_oom_never_evicts_referenced():
+    cache = _prefix_cache(num_blocks=7)            # 6 usable
+    a = np.arange(1, 9, dtype=np.int32)            # 2 blocks
+    b = np.arange(101, 109, dtype=np.int32)        # 2 blocks
+    cache.reserve(0, 8);  cache.commit_prefix(0, a, 8)
+    cache.reserve(1, 8);  cache.commit_prefix(1, b, 8)
+    cache.release(0)                               # a's blocks -> LRU
+    live = list(cache.tables[1])
+    # request 2 needs 4 blocks: 2 free + 2 evicted from the LRU (a's),
+    # while request 1's referenced blocks are untouched
+    c = np.arange(201, 217, dtype=np.int32)
+    assert cache.can_fit(16)
+    assert cache.reserve(2, 16)
+    assert cache.tables[1] == live
+    assert cache.prefix_stats()["evictions"] == 2
+    assert cache.match_prefix(np.concatenate([a, [9]])) == []   # a evicted
+    assert len(cache.match_prefix(np.concatenate([b, [9]]))) == 2  # b cached
+    # pool genuinely exhausted now: no free, no LRU, reserve reports OOM
+    assert not cache.reserve(3, 4)
+    assert 3 not in cache.tables
+
+
+def test_prefix_partial_eviction_sacrifices_chain_tail_first():
+    """Regression: release() retired a chain head-first into the LRU, so a
+    partial eviction removed the head block — match_prefix then broke at
+    block 0 while the still-cached tail sat unmatchable.  Eviction must eat
+    a retired chain from its tail."""
+    cache = _prefix_cache(num_blocks=5)            # 4 usable
+    toks = np.arange(1, 13, dtype=np.int32)        # 3 full blocks
+    cache.reserve(0, 12)
+    cache.commit_prefix(0, toks, 12)
+    cache.release(0)                               # whole chain -> LRU
+    assert cache.num_cached == 3
+    cache.reserve(1, 8)                            # needs 2: 1 free + 1 evict
+    assert cache.prefix_stats()["evictions"] == 1
+    # the surviving 2 cached blocks are the chain HEAD — still matchable
+    assert len(cache.match_prefix(toks)) == 2
+
+
+def test_prefix_commit_dedups_duplicate_content():
+    """Two requests that prefilled the same tokens privately (admitted
+    before either committed): first writer wins the index entry, the
+    second stays private and frees outright on release."""
+    cache = _prefix_cache()
+    toks = np.arange(1, 9, dtype=np.int32)
+    cache.reserve(0, 8)
+    cache.reserve(1, 8)
+    cache.commit_prefix(0, toks, 8)
+    cache.commit_prefix(1, toks, 8)                # duplicate content
+    t0, t1 = cache.tables[0], cache.tables[1]
+    assert all(cache.allocator.refcount(x) == 2 for x in t0)
+    assert all(cache.allocator.refcount(x) == 1 for x in t1)
+    free_before = cache.allocator.num_free
+    cache.release(1)                               # private -> freed
+    assert cache.allocator.num_free == free_before + 2
+    cache.release(0)                               # indexed -> LRU
+    assert cache.num_cached == 2
+
+
+def test_prefix_sharing_rejected_for_slot_state_archs():
+    """Slot-state rows (mamba2 recurrent state, cross-attn / wdec K/V) are
+    per-request and cannot be content-shared — a precise error, not silent
+    corruption."""
+    mesh = make_host_mesh()
+    for arch in (TINY_SSM, TINY_HYBRID, TINY_CROSS, TINY_SHARED, TINY_ENCDEC):
+        with pytest.raises(ValueError, match="slot-state"):
+            ContinuousBatchingEngine(arch, _params_for(arch), mesh, slots=2,
+                                     max_len=64, share_prefix=True)
 
 
 def test_paged_cache_specs_match_pool_tree():
@@ -263,16 +408,34 @@ def test_scheduler_preemption_victim_and_requeue_order():
     for i in range(3):
         s.submit(_req(i))
     running = [s.next_admission() for _ in range(2)]
-    running[0].out_tokens = [1, 2, 3]         # longest-running
+    running[0].out_tokens = [1, 2, 3]         # largest resident footprint
     running[1].out_tokens = [1]
     victim = s.pick_preemption_victim(running)
     assert victim.id == 0
     s.preempt(victim)
     # preempted request keeps its original arrival seq: head of its class
     assert s.next_admission().id == 0
-    # priority dominates generated length
+    # priority dominates footprint
     hi = _req(7, priority=-1); hi.out_tokens = [1, 2, 3, 4]
     assert s.pick_preemption_victim([hi, running[1]]).id == running[1].id
+
+
+def test_preemption_victim_ranks_by_resident_footprint():
+    """Regression: the docstring promises 'frees the most blocks per
+    preemption' but the ranking used len(out_tokens) — a long-prompt
+    request mid-prefill (0 generated tokens, many resident blocks) was
+    ranked LAST.  Rank by len(context()) = tokens in cache instead."""
+    s = RequestScheduler()
+    big = _req(0, plen=40, max_new=4)          # mid-prefill: 40 resident
+    small = _req(1, plen=4, max_new=16)
+    s.submit(big); s.submit(small)
+    s.next_admission(); s.next_admission()
+    small.out_tokens = list(range(10))         # long-running, 14 resident
+    assert s.pick_preemption_victim([small, big]) is big
+    # generated tokens still count toward footprint: 4+20 > 8+10
+    small2 = _req(2, plen=8, max_new=16); small2.out_tokens = list(range(10))
+    grown = _req(3, plen=4, max_new=24); grown.out_tokens = list(range(20))
+    assert s.pick_preemption_victim([small2, grown]) is grown
 
 
 # ---------------------------------------------------------------------------
@@ -320,6 +483,86 @@ def test_parity_under_forced_preemption(scenario, kw):
     assert got == load_goldens(scenario), scenario
     assert eng.metrics.preemptions > 0
     assert eng.cache.allocator.num_used == 0
+
+
+# prefix sharing must be invisible to greedy outputs: the two purely paged
+# families run the pinned-golden scenarios again with sharing ON, including
+# forced preemption of a sharing request (its retired blocks re-match at
+# re-admission)
+SHARING_PARITY_CASES = [
+    ("tiny/base",    dict(block_size=4, prefill_chunk=3)),
+    ("mla/base",     dict(block_size=4, prefill_chunk=3)),
+    ("tiny/preempt", dict(block_size=4, num_blocks=8, prefill_chunk=8)),
+    ("mla/preempt",  dict(block_size=4, num_blocks=8, prefill_chunk=8)),
+]
+
+
+@pytest.mark.parametrize("scenario,kw", SHARING_PARITY_CASES,
+                         ids=[c[0] for c in SHARING_PARITY_CASES])
+def test_greedy_parity_with_prefix_sharing_enabled(scenario, kw):
+    mesh = make_host_mesh()
+    eng, got = _run_scenario(scenario, mesh, share_prefix=True, **kw)
+    assert got == load_goldens(scenario), scenario
+    if scenario.endswith("preempt"):
+        # the victim was a sharing request: its committed blocks retired to
+        # the LRU and re-matched when it was re-admitted
+        assert eng.metrics.preemptions > 0
+        assert eng.cache.prefix_stats()["hit_tokens"] > 0
+    # after drain no request holds blocks; only the content index does
+    assert eng.cache.allocator.num_used == eng.cache.num_cached
+    assert eng.metrics.summary()["prefix_hit_rate"] \
+        == pytest.approx(eng.cache.prefix_stats()["hit_rate"])
+
+
+def test_shared_prefix_skips_prefill_and_matches_unshared_outputs():
+    """Requests sharing a system-prompt prefix: admission hands the second
+    request the first's cached blocks and starts prefill at the matched
+    boundary, and greedy outputs are identical to the sharing-off serve."""
+    mesh = make_host_mesh()
+    prefix = np.arange(1, 13, dtype=np.int32)       # 3 full blocks of 4
+    prompts = [np.concatenate([prefix, np.asarray([50 + i, 60 + i],
+                                                  np.int32)])
+               for i in range(4)]
+
+    def serve(share):
+        eng = ContinuousBatchingEngine(TINY, _params_for(TINY), mesh,
+                                       slots=2, max_len=64, block_size=4,
+                                       prefill_chunk=4, share_prefix=share)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(id=i, prompt=p.copy(), max_new_tokens=5))
+        eng.run_until_drained()
+        return eng, {r.id: r.out_tokens for r in eng.completed}
+
+    eng_off, out_off = serve(False)
+    eng_on, out_on = serve(True)
+    assert out_on == out_off
+    stats = eng_on.cache.prefix_stats()
+    # requests 0 and 1 fill both slots in the same admission step, before
+    # either commits a block, so they prefill privately (first writer wins
+    # the index); 2 and 3 match the full prefix
+    assert stats["hit_tokens"] == 2 * len(prefix)
+    assert eng_off.cache.prefix_stats()["hit_tokens"] == 0
+    # the skipped prefix means fewer prefill chunks end to end
+    assert eng_on.metrics.prefill_chunks < eng_off.metrics.prefill_chunks
+
+
+def test_shared_prefix_admission_starts_at_matched_boundary():
+    mesh = make_host_mesh()
+    eng = ContinuousBatchingEngine(TINY, _params_for(TINY), mesh, slots=2,
+                                   max_len=64, block_size=4, prefill_chunk=4,
+                                   share_prefix=True)
+    prefix = np.arange(1, 9, dtype=np.int32)        # 2 full blocks
+    eng.submit(Request(id=0, prompt=prefix.copy(), max_new_tokens=2))
+    eng.run_until_drained()
+    eng.submit(Request(id=1,
+                       prompt=np.concatenate([prefix, [77]]).astype(np.int32),
+                       max_new_tokens=2))
+    eng._admit()
+    slot = next(s for s in eng.slots if s.busy)
+    assert slot.prefill_pos == 8                    # prefill skips the prefix
+    assert slot.pos == 8
+    eng.run_until_drained()
+    assert len(eng.completed) == 2
 
 
 def test_parity_with_multiple_victims_in_one_step():
@@ -749,6 +992,81 @@ def test_metrics_single_token_request_tpot():
     rep = m.request_report(0)
     assert rep["tpot_s"] == pytest.approx(0.0)
     assert rep["ttft_s"] == pytest.approx(0.3)
+
+
+def test_metrics_in_flight_requests_report_none_not_negative():
+    """Regression: request_report defaulted missing timestamps to 0.0, so a
+    submitted-not-started request reported ttft_s = -submit_t (large and
+    negative) and a started-not-finished one a negative tpot_s.  Missing
+    lifecycle points must yield None, and summary() means must skip them."""
+    m = ServingMetrics()
+    m.on_submit(0, now=100.0)                 # submitted, no first token yet
+    rep = m.request_report(0)
+    assert rep["ttft_s"] is None and rep["tpot_s"] is None
+    m.on_submit(1, now=100.0)                 # started, not finished
+    m.on_first_token(1, now=100.5)
+    rep = m.request_report(1)
+    assert rep["ttft_s"] == pytest.approx(0.5)
+    assert rep["tpot_s"] is None
+    # an id never submitted at all
+    rep = m.request_report(99)
+    assert rep["ttft_s"] is None and rep["tpot_s"] is None
+    # summary stays total and unpolluted by the in-flight requests
+    m.on_submit(2, now=101.0)
+    m.on_first_token(2, now=101.2)
+    m.on_finish(2, n_tokens=3, now=102.2)
+    s = m.summary()
+    assert s["ttft_mean_s"] == pytest.approx(0.2)
+    assert s["tpot_mean_s"] == pytest.approx(0.5)
+
+
+def test_metrics_block_utilization_and_prefix_hit_rate():
+    """Cache pressure is sampled per step (block_utilization_mean/max) and
+    prefix-cache admission matches aggregate into prefix_hit_rate."""
+    m = ServingMetrics()
+    m.on_step(0, 1, 2, block_utilization=0.25)
+    m.on_step(0, 2, 2, block_utilization=0.75)
+    m.on_step(0, 2, 2)                        # engines without a sample
+    m.on_prefix_match(12, 16)
+    m.on_prefix_match(0, 8)
+    s = m.summary()
+    assert s["block_utilization_mean"] == pytest.approx(0.5)
+    assert s["block_utilization_max"] == pytest.approx(0.75)
+    assert s["prefix_hit_rate"] == pytest.approx(12 / 24)
+    assert ServingMetrics().summary()["prefix_hit_rate"] == 0.0
+
+
+def test_engine_samples_block_utilization():
+    mesh = make_host_mesh()
+    eng = ContinuousBatchingEngine(TINY, _params_for(TINY), mesh, slots=2,
+                                   max_len=64, block_size=4, prefill_chunk=8)
+    eng.submit(Request(id=0, prompt=np.arange(1, 9, dtype=np.int32),
+                       max_new_tokens=4))
+    eng.run_until_drained()
+    s = eng.metrics.summary()
+    assert len(eng.metrics.block_utilization_samples) == s["engine_steps"]
+    assert s["block_utilization_max"] > 0.0
+
+
+def test_run_until_drained_raises_instead_of_spinning():
+    """A wedged engine (work queued, nothing running, admission refusing
+    forever) must raise after max_idle_steps, not spin silently."""
+    mesh = make_host_mesh()
+    eng = ContinuousBatchingEngine(
+        TINY, _params_for(TINY), mesh, slots=2, max_len=64, block_size=4,
+        prefill_chunk=8,
+        scheduler=RequestScheduler(max_tokens_in_flight=64))
+    eng.submit(Request(id=0, prompt=np.arange(1, 9, dtype=np.int32),
+                       max_new_tokens=4))
+    # simulate a leaked budget: admission is refused forever while the
+    # queue stays non-empty and every slot is idle
+    eng.scheduler._in_flight_tokens = 64
+    with pytest.raises(RuntimeError, match="no progress"):
+        eng.run_until_drained(max_idle_steps=10)
+    # a healthy engine drains fine under the same guard
+    eng.scheduler._in_flight_tokens = 0
+    eng.run_until_drained(max_idle_steps=10)
+    assert len(eng.completed) == 1
 
 
 def test_metrics_summary_on_empty_and_partial_runs():
