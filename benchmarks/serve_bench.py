@@ -24,6 +24,13 @@ system-prompt prefix, served by the continuous engine with
 prefix-cache hit rate and materially lower mean TTFT (matched requests
 skip prefilling the shared prefix).
 
+A ``sampled_decode`` section runs the SAME Poisson trace through the
+engine greedy (temperature 0) and with per-request seeded nucleus
+sampling (temperature 0.8, top-p 0.95, top-k 64, seed=request id) — the
+v2 sampler is fused into the jitted steps, so the sampled rows measure
+the real cost of the on-device top-k/top-p masks + Gumbel draw against
+the argmax baseline on an identical workload.
+
   PYTHONPATH=src python benchmarks/serve_bench.py            # smoke-size
   PYTHONPATH=src python benchmarks/serve_bench.py --requests 32 --rate 4
 """
@@ -45,7 +52,8 @@ from repro.configs import ARCHS, reduce_for_smoke
 from repro.launch.mesh import make_host_mesh
 from repro.models import transformer as T
 from repro.runtime.server import Request as WaveRequest, Server
-from repro.serving import ContinuousBatchingEngine, Request, ServingMetrics
+from repro.serving import (ContinuousBatchingEngine, Request, SamplingParams,
+                           ServingMetrics)
 
 ROOT = pathlib.Path(__file__).resolve().parents[1]
 
@@ -146,7 +154,10 @@ def bench_wave_shim(arch, params, mesh, trace, *, slots, max_len,
 
 
 def bench_continuous(arch, params, mesh, trace, *, slots, max_len,
-                     block_size, prefill_chunk, share_prefix=False):
+                     block_size, prefill_chunk, share_prefix=False,
+                     sampling_for=None):
+    """``sampling_for(request_id) -> SamplingParams`` attaches per-request
+    decode controls (None = greedy default)."""
     eng = ContinuousBatchingEngine(arch, params, mesh, slots=slots,
                                    max_len=max_len, block_size=block_size,
                                    prefill_chunk=prefill_chunk,
@@ -166,7 +177,9 @@ def bench_continuous(arch, params, mesh, trace, *, slots, max_len,
             # stamp TTFT from trace *arrival* like the wave-shim rows, not
             # from when the polling loop got around to submitting
             eng.submit(Request(id=i, prompt=prompt.copy(),
-                               max_new_tokens=max_new),
+                               max_new_tokens=max_new,
+                               sampling=(sampling_for(i) if sampling_for
+                                         else SamplingParams())),
                        now=t0 + arrival_s)
         if eng.has_work:
             eng.step()
@@ -237,6 +250,39 @@ def bench_prefix_sharing(arch_name, args, mesh):
     return row
 
 
+def bench_sampled_decode(arch_name, args, mesh):
+    """Greedy vs seeded nucleus sampling on the same Poisson trace: the
+    sampler (top-k/top-p masks + Gumbel draw) is fused into the jitted
+    steps, so the delta is its true per-step device cost."""
+    arch = reduce_for_smoke(ARCHS[arch_name])
+    params = T.init_lm(jax.random.PRNGKey(0), arch)
+    trace = make_trace(args.requests, args.rate, arch.vocab)
+    sampled = SamplingParams(temperature=0.8, top_k=64, top_p=0.95)
+    row = {"arch": arch.name,
+           "sampling": {"temperature": sampled.temperature,
+                        "top_k": sampled.top_k, "top_p": sampled.top_p,
+                        "seed": "request id"},
+           "trace": {"requests": args.requests, "rate_hz": args.rate}}
+    for name, fn in [("greedy", None),
+                     ("sampled", lambda i: SamplingParams(
+                         temperature=0.8, top_k=64, top_p=0.95, seed=i))]:
+        r = bench_continuous(arch, params, mesh, trace, slots=args.slots,
+                             max_len=args.max_len,
+                             block_size=args.block_size,
+                             prefill_chunk=args.prefill_chunk,
+                             sampling_for=fn)
+        row[name] = r
+        print(f"[{arch.name}/decode/{name}] {r['total_tokens']} tokens "
+              f"{r['tokens_per_sec']:.1f} tok/s "
+              f"ttft {r['ttft_mean_s']*1e3:.0f}ms "
+              f"tpot {r['tpot_mean_s']*1e3:.1f}ms")
+    row["sampled_vs_greedy_tokens_per_sec"] = (
+        row["sampled"]["tokens_per_sec"] / row["greedy"]["tokens_per_sec"])
+    print(f"[{arch.name}/decode] sampled/greedy throughput "
+          f"{row['sampled_vs_greedy_tokens_per_sec']:.2f}x")
+    return row
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--archs",
@@ -266,6 +312,8 @@ def main():
     for arch_name in (s.strip() for s in args.archs.split(",")):
         results["archs"][arch_name] = bench_arch(arch_name, args, mesh)
     results["prefix_sharing"] = bench_prefix_sharing(args.prefix_arch, args,
+                                                     mesh)
+    results["sampled_decode"] = bench_sampled_decode(args.prefix_arch, args,
                                                      mesh)
     with open(args.out, "w") as f:
         json.dump(results, f, indent=2)

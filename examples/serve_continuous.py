@@ -1,9 +1,12 @@
-"""Continuous-batching serving example: paged KV cache + request scheduler.
+"""Continuous-batching serving example: paged KV cache + request scheduler,
+driven through the v2 generation API.
 
-Mixed prompt lengths and priorities flow through the admission scheduler;
-freed slots are refilled every engine step and long prompts prefill in
-chunks between decode steps (contrast with examples/serve_lm.py, the
-wave-synchronized baseline).
+Mixed prompt lengths, priorities AND per-request SamplingParams flow
+through one engine batch: greedy requests ride alongside seeded nucleus
+sampling in the same fused decode step (per-slot temperature/top-k/top-p
+rows), results come back as typed ``RequestOutput``s (token ids, finish
+reason, optional logprobs, TTFT/TPOT), and ``on_token`` streams tokens as
+they are sampled.
 
     PYTHONPATH=src python examples/serve_continuous.py
 """
@@ -18,17 +21,20 @@ import jax
 from repro.configs import ARCHS, reduce_for_smoke
 from repro.launch.mesh import make_host_mesh
 from repro.models import transformer as T
-from repro.serving import ContinuousBatchingEngine, Request, RequestScheduler
+from repro.serving import (ContinuousBatchingEngine, Request,
+                           RequestScheduler, SamplingParams)
 
 
 def main():
     arch = reduce_for_smoke(ARCHS["qwen3-8b"])
     params = T.init_lm(jax.random.PRNGKey(0), arch)
     mesh = make_host_mesh()
+    streamed = []
     engine = ContinuousBatchingEngine(
         arch, params, mesh, slots=4, max_len=128, block_size=16,
         prefill_chunk=32,
-        scheduler=RequestScheduler(max_tokens_in_flight=512))
+        scheduler=RequestScheduler(max_tokens_in_flight=512),
+        on_token=lambda rid, tok: streamed.append((rid, tok)))
     print(f"serving {arch.name}: "
           f"{sum(x.size for x in jax.tree.leaves(params)):,} params, "
           f"{len(engine.slots)} slots, "
@@ -36,22 +42,34 @@ def main():
           f"-token KV blocks")
 
     rng = np.random.default_rng(0)
+    requests = []
     for i in range(10):
         prompt_len = int(rng.integers(8, 48))
-        engine.submit(Request(
+        # even requests decode greedily; odd ones nucleus-sample with a
+        # per-request seed — both mixes run in the same engine batch
+        sampling = (SamplingParams() if i % 2 == 0 else
+                    SamplingParams(temperature=0.8, top_p=0.95, seed=i,
+                                   logprobs=True))
+        requests.append(Request(
             id=i,
             prompt=rng.integers(1, arch.vocab, size=prompt_len)
             .astype(np.int32),
             max_new_tokens=12,
-            priority=0 if i % 3 == 0 else 1))   # every 3rd request urgent
-    wall = engine.run_until_drained()
+            priority=0 if i % 3 == 0 else 1,    # every 3rd request urgent
+            sampling=sampling))
+    outs = engine.generate(requests)
     s = engine.metrics.summary()
     print(f"completed {s['completed']} requests, {s['total_tokens']} tokens "
-          f"in {wall:.2f}s ({s['decode_steps']} decode steps, "
+          f"({s['decode_steps']} decode steps, "
           f"{s['prefill_chunks']} prefill chunks, "
-          f"occupancy {s['slot_occupancy_mean']*100:.0f}%)")
-    for r in engine.completed[:3]:
-        print(f"  req {r.id}: {r.out_tokens}")
+          f"occupancy {s['slot_occupancy_mean']*100:.0f}%, "
+          f"{len(streamed)} tokens streamed via on_token)")
+    for o in outs[:4]:
+        mode = "greedy" if o.logprobs is None else "sampled"
+        lp = ("" if o.logprobs is None
+              else f"  logprobs[:3]={[round(x, 2) for x in o.logprobs[:3]]}")
+        print(f"  req {o.request_id} [{mode}, {o.finish_reason}, "
+              f"ttft {o.ttft_s*1e3:.0f}ms]: {o.token_ids}{lp}")
 
 
 if __name__ == "__main__":

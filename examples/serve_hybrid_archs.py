@@ -25,7 +25,7 @@ import jax
 from repro.configs import ARCHS, reduce_for_smoke
 from repro.launch.mesh import make_host_mesh
 from repro.models import transformer as T
-from repro.serving import ContinuousBatchingEngine, Request
+from repro.serving import ContinuousBatchingEngine, Request, SamplingParams
 
 
 def serve(arch_name, mesh, *, frontend_for=None):
@@ -35,26 +35,31 @@ def serve(arch_name, mesh, *, frontend_for=None):
                                       max_len=128, block_size=16,
                                       prefill_chunk=32)
     rng = np.random.default_rng(0)
+    requests, has_fe = [], set()
     for i in range(8):
         prompt_len = int(rng.integers(8, 48))
         fe = None
         if frontend_for is not None and i % 2 == 0:   # every other request
             fe = rng.standard_normal(
                 (1, arch.encoder.seq_len, arch.d_model)).astype(np.float32)
-        engine.submit(Request(
+            has_fe.add(i)
+        requests.append(Request(
             id=i,
             prompt=rng.integers(1, arch.vocab, size=prompt_len)
             .astype(np.int32),
-            max_new_tokens=12, frontend=fe))
-    wall = engine.run_until_drained()
+            max_new_tokens=12, frontend=fe,
+            # seeded sampling works on the slot-state archs too — the
+            # sampler only sees logits, never the cache layout
+            sampling=SamplingParams(temperature=0.7, top_p=0.9, seed=i)))
+    outs = engine.generate(requests)
     s = engine.metrics.summary()
     print(f"[{arch.name}] {s['completed']} requests, {s['total_tokens']} "
-          f"tokens in {wall:.2f}s ({s['decode_steps']} decode steps, "
+          f"tokens ({s['decode_steps']} decode steps, "
           f"{s['prefill_chunks']} prefill chunks, occupancy "
           f"{s['slot_occupancy_mean']*100:.0f}%)")
-    for r in engine.completed[:2]:
-        tag = " (audio frontend)" if r.frontend is not None else ""
-        print(f"  req {r.id}{tag}: {r.out_tokens}")
+    for o in outs[:2]:
+        tag = " (audio frontend)" if o.request_id in has_fe else ""
+        print(f"  req {o.request_id}{tag} [{o.finish_reason}]: {o.token_ids}")
 
 
 def main():

@@ -55,21 +55,23 @@ def serve_shared_prefix(arch, params, mesh):
     system_prompt = rng.integers(1, arch.vocab, size=64).astype(np.int32)
     print(f"serving {arch.name} with prefix sharing: 64-token system "
           f"prompt shared by every request")
-    for i in range(10):
-        user = rng.integers(1, arch.vocab, size=8).astype(np.int32)
-        eng.submit(Request(id=i, prompt=np.concatenate([system_prompt, user]),
-                           max_new_tokens=12))
-    wall = eng.run_until_drained()
+    outs = eng.generate([
+        Request(id=i,
+                prompt=np.concatenate(
+                    [system_prompt,
+                     rng.integers(1, arch.vocab, size=8).astype(np.int32)]),
+                max_new_tokens=12)
+        for i in range(10)])
     s = eng.metrics.summary()
     print(f"completed {s['completed']} requests, {s['total_tokens']} tokens "
-          f"in {wall:.2f}s — prefix hit rate {s['prefix_hit_rate']:.2f}, "
+          f"— prefix hit rate {s['prefix_hit_rate']:.2f}, "
           f"{s['prefill_chunks']} prefill chunks, "
           f"mean TTFT {s['ttft_mean_s']*1e3:.0f}ms, "
           f"block utilization {s['block_utilization_mean']:.2f} mean / "
           f"{s['block_utilization_max']:.2f} max")
     print(f"cache: {eng.cache.prefix_stats()}")
-    for r in eng.completed[:3]:
-        print(f"  req {r.id}: {r.out_tokens}")
+    for o in outs[:3]:
+        print(f"  req {o.request_id} [{o.finish_reason}]: {o.token_ids}")
 
 
 def main():

@@ -18,7 +18,7 @@ import pathlib
 import shutil
 import threading
 import time
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import numpy as np
@@ -62,10 +62,10 @@ def restore_pytree(path: pathlib.Path, like_tree, *, shardings=None):
     if shardings is not None:
         s_leaves = jax.tree.leaves(shardings,
                                    is_leaf=lambda x: hasattr(x, "spec"))
-        loaded = [jax.device_put(a.astype(l.dtype), s)
-                  for a, l, s in zip(loaded, leaves, s_leaves)]
+        loaded = [jax.device_put(a.astype(leaf.dtype), s)
+                  for a, leaf, s in zip(loaded, leaves, s_leaves)]
     else:
-        loaded = [jax.device_put(a.astype(l.dtype)) for a, l in
+        loaded = [jax.device_put(a.astype(leaf.dtype)) for a, leaf in
                   zip(loaded, leaves)]
     return jax.tree_util.tree_unflatten(treedef, loaded), manifest
 

@@ -18,7 +18,7 @@ Block kinds:
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence
+from typing import Optional
 
 
 @dataclasses.dataclass(frozen=True)

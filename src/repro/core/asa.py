@@ -16,7 +16,7 @@ from repro.core import sharding as SH
 from repro.core import solver as SV
 from repro.core.costmodel import CostModel, MeshShape
 from repro.core.profiler import ComponentProfiler, StepMonitor
-from repro.core.strategy import ALL_STRATEGIES, Strategy
+from repro.core.strategy import ALL_STRATEGIES
 
 
 @dataclasses.dataclass

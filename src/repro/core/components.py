@@ -12,7 +12,6 @@ import functools
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig, ShapeSpec
 from repro.models import transformer as T
@@ -59,8 +58,8 @@ SPLIT_KEYS = {
 
 def _tree_size(tree) -> int:
     import math
-    return sum(math.prod(l.shape) if l.shape else 1
-               for l in jax.tree.leaves(tree))
+    return sum(math.prod(leaf.shape) if leaf.shape else 1
+               for leaf in jax.tree.leaves(tree))
 
 
 @functools.lru_cache(maxsize=64)

@@ -334,7 +334,7 @@ def cache_specs(arch: ArchConfig, assignment: dict[str, Strategy],
                     "cross": {"k": P(None, ba, None, None, None),
                               "v": P(None, ba, None, None, None)}}
             elif kind == "shared_attn":
-                ok = _div(arch.n_heads, mesh.model)
+                _div(arch.n_heads, mesh.model)   # validates divisibility
                 t_ax = "model" if (strat in (Strategy.MP, Strategy.HP)) else None
                 seg_spec[f"b{bi}"] = {"k": P(None, ba, t_ax, None, None),
                                       "v": P(None, ba, t_ax, None, None),

@@ -7,7 +7,6 @@ production TPU path drops the same calls onto the MXU.
 from __future__ import annotations
 
 import functools
-import math
 
 import jax
 import jax.numpy as jnp

@@ -78,8 +78,9 @@ def ssd_scan(x, Bm, Cm, dt, a, h0=None, *, chunk: int = DEFAULT_CHUNK,
     Q = min(chunk, S)
     pad = (-S) % Q
     if pad:  # a=0, dt=0 padding leaves the state untouched
-        padf = lambda t: jnp.pad(t, [(0, 0), (0, 0), (0, pad)]
-                                 + [(0, 0)] * (t.ndim - 3))
+        def padf(t):
+            return jnp.pad(t, [(0, 0), (0, 0), (0, pad)]
+                           + [(0, 0)] * (t.ndim - 3))
         x, Bm, Cm, dt, a = map(padf, (x, Bm, Cm, dt, a))
     nc = x.shape[2] // Q
     if h0 is None:

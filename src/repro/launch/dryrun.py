@@ -168,7 +168,7 @@ def parse_collectives(hlo_text: str) -> dict:
 def _sds(tree, specs, mesh):
     """Attach NamedShardings to a ShapeDtypeStruct tree."""
     return jax.tree.map(
-        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype,
+        lambda leaf, s: jax.ShapeDtypeStruct(leaf.shape, leaf.dtype,
                                           sharding=NamedSharding(mesh, s)),
         tree, specs)
 

@@ -3,6 +3,10 @@
     PYTHONPATH=src python -m repro.launch.serve --arch zamba2-2.7b --smoke \
         --engine continuous --requests 8 --prompt-len 16 --max-new 12
 
+    # seeded nucleus sampling with stop tokens
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --smoke \
+        --temperature 0.8 --top-p 0.95 --seed 7 --stop 11,12
+
 --engine continuous  (default) continuous batching over the unified serving
                      cache (paged KV / latent block pools + slot-state pools
                      for SSM, cross-attn and encoder K/V state) with chunked
@@ -13,7 +17,18 @@
                      deepseek's MLA included.
 --engine wave        DEPRECATED: the wave decode path was deleted; this now
                      exercises the runtime.server.Server compatibility shim,
-                     which delegates every token to the continuous engine.
+                     which delegates every token to the continuous engine
+                     (greedy-only — the legacy API has no sampling field).
+--temperature /
+--top-k / --top-p    per-request SamplingParams for every submitted request
+                     (temperature 0 = exact greedy argmax, the default).
+--seed               base RNG seed; request i samples with seed+i.  Token
+                     streams are deterministic — identical across reruns
+                     and across recompute-preemptions.
+--stop               comma-separated token ids: sampling one finishes the
+                     request with finish_reason="stop" (the stop token is
+                     the last entry of token_ids).
+--logprobs           attach per-token logprobs to each RequestOutput.
 --share-prefix       cross-request prefix caching (continuous engine, purely
                      paged archs only): prompts share a system prefix of
                      --shared-prefix-len tokens, later requests reuse its
@@ -23,6 +38,7 @@
 from __future__ import annotations
 
 import argparse
+import collections
 
 import jax
 import numpy as np
@@ -49,6 +65,19 @@ def main():
                     help="prompt tokens prefilled per engine step")
     ap.add_argument("--num-blocks", type=int, default=None,
                     help="physical KV blocks (default: slots*max_len worth)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy argmax)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="keep only the k highest logits (0 = disabled)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus sampling mass (1.0 = disabled)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="base sampling seed; request i uses seed+i")
+    ap.add_argument("--stop", default=None,
+                    help="comma-separated stop token ids (finish_reason="
+                         "'stop' when one is sampled)")
+    ap.add_argument("--logprobs", action="store_true",
+                    help="attach per-token logprobs to each RequestOutput")
     ap.add_argument("--share-prefix", action="store_true",
                     help="continuous engine only: reuse cached KV blocks "
                          "across requests sharing a prompt prefix")
@@ -78,6 +107,11 @@ def main():
                    .astype(np.int32) for _ in range(args.requests)]
 
     if args.engine == "wave":
+        if (args.temperature != 0.0 or args.top_k != 0 or args.top_p != 1.0
+                or args.seed != 0 or args.stop or args.logprobs):
+            ap.error("--engine wave is greedy-only (the legacy API has no "
+                     "sampling field): drop the sampling flags or use "
+                     "--engine continuous")
         from repro.runtime.server import Request, Server
         server = Server(arch, params, mesh, slots=args.slots,
                         max_len=args.max_len,
@@ -95,25 +129,42 @@ def main():
               f"(continuous engine under the hood)")
         return
 
-    from repro.serving import ContinuousBatchingEngine, Request
+    from repro.serving import (ContinuousBatchingEngine, Request,
+                               SamplingParams)
+    stop_ids = (tuple(int(s) for s in args.stop.split(","))
+                if args.stop else ())
     engine = ContinuousBatchingEngine(
         arch, params, mesh, slots=args.slots, max_len=args.max_len,
         block_size=args.block_size, num_blocks=args.num_blocks,
         prefill_chunk=args.prefill_chunk, share_prefix=args.share_prefix)
-    for i, p in enumerate(prompts):
-        engine.submit(Request(id=i, prompt=p, max_new_tokens=args.max_new))
-    wall = engine.run_until_drained()
+    outs = engine.generate([
+        Request(id=i, prompt=p, max_new_tokens=args.max_new,
+                sampling=SamplingParams(temperature=args.temperature,
+                                        top_k=args.top_k, top_p=args.top_p,
+                                        seed=args.seed + i,
+                                        stop_token_ids=stop_ids,
+                                        logprobs=args.logprobs))
+        for i, p in enumerate(prompts)])
     s = engine.metrics.summary()
+    reasons = collections.Counter(o.finish_reason for o in outs)
     share = (f", prefix hit rate {s['prefix_hit_rate']:.2f}"
              if args.share_prefix else "")
-    print(f"[continuous] {s['completed']} requests, {s['total_tokens']} "
-          f"tokens, {wall:.2f}s wall "
-          f"({s['total_tokens'] / max(wall, 1e-9):.1f} tok/s host-wall), "
+    mode = ("greedy" if args.temperature == 0 else
+            f"T={args.temperature} top_k={args.top_k} top_p={args.top_p} "
+            f"seed={args.seed}")
+    print(f"[continuous/{mode}] {s['completed']} requests, "
+          f"{s['total_tokens']} tokens, "
           f"{s['decode_steps']} decode steps / {s['prefill_chunks']} prefill "
           f"chunks, ttft mean {s['ttft_mean_s']*1e3:.1f}ms, occupancy "
           f"{s['slot_occupancy_mean']*100:.0f}%, block util "
           f"{s['block_utilization_mean']:.2f}, "
-          f"{s['preemptions']} preemptions{share}")
+          f"{s['preemptions']} preemptions, finish reasons "
+          f"{dict(reasons)}{share}")
+    for o in outs[:3]:
+        lp = (f" logprobs[:3]={[round(x, 3) for x in o.logprobs[:3]]}"
+              if o.logprobs else "")
+        print(f"  req {o.request_id} [{o.finish_reason}] "
+              f"{o.token_ids}{lp}")
     if args.metrics_out:
         engine.metrics.write(args.metrics_out, engine="continuous",
                              arch=arch.name)

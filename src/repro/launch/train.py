@@ -11,7 +11,6 @@ from __future__ import annotations
 
 import argparse
 
-import jax
 
 from repro.configs import ARCHS, get_arch, reduce_for_smoke
 from repro.configs.base import ShapeSpec

@@ -5,7 +5,7 @@ assigns a parallelism strategy per block kind per segment.
 """
 from __future__ import annotations
 
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

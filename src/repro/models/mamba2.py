@@ -144,7 +144,8 @@ def _ssd_chunked(cfg: Mamba2Config, x, Bm, Cm, dt_a, h0=None):
     Q = min(cfg.chunk, S_orig)
     if S_orig % Q:  # pad: dt=0, a=0 => decay 1, zero input — state unaffected
         pad = Q - S_orig % Q
-        padf = lambda t: jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2))
+        def padf(t):
+            return jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2))
         x, Bm, Cm, dt, a = map(padf, (x, Bm, Cm, dt, a))
     S = x.shape[1]
     nc = S // Q

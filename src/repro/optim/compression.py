@@ -8,7 +8,6 @@ bottleneck; ICI-axis reductions stay exact.
 """
 from __future__ import annotations
 
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -30,7 +29,7 @@ def compress(grads, error_state):
 
 def decompress_and_update_error(q, corrected):
     """-> (dequantized grads, new error residuals)."""
-    deq = jax.tree.map(lambda l: l.dense(), q,
+    deq = jax.tree.map(lambda v: v.dense(), q,
                        is_leaf=lambda x: isinstance(x, QLeaf))
     new_err = jax.tree.map(lambda c, d: c - d, corrected, deq)
     return deq, new_err

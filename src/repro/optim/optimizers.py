@@ -9,8 +9,7 @@ optimizer state (sharded identically — ZeRO follows for free under HP).
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Callable, NamedTuple, Optional
+from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -16,9 +16,12 @@ test (tests/test_serving.py::test_multihost_decode_parity_and_cache_placement).
 ``submit(Request)`` then ``run_until_drained()``, with the caller's Request
 objects mutated in place — while delegating every token to the engine.  New
 code should construct ``ContinuousBatchingEngine`` directly: it exposes the
-request scheduler (priorities, token budgets), per-request frontends,
+v2 generation API (per-request ``SamplingParams``, typed ``RequestOutput``
+with finish reasons and latency, ``generate()``/``stream()``/``on_token``),
+the request scheduler (priorities, token budgets), per-request frontends,
 streaming admission via ``step()``, and JSON serving metrics, none of which
-fit the legacy interface.  Restrictions the wave path never enforced now
+fit the legacy interface.  The shim is greedy-only: the legacy Request has
+no sampling field, and every token it serves decodes at temperature 0.  Restrictions the wave path never enforced now
 apply here too: max_new_tokens >= 1, non-empty prompts shorter than
 max_len (the wave loop admitted a prompt of exactly max_len and served a
 single token; the engine needs the position for that token's KV), and
@@ -97,11 +100,13 @@ class Server:
 
     def run_until_drained(self) -> float:
         wall = self.engine.run_until_drained()
-        # mirror engine results back onto the caller's legacy objects
-        for er in self.engine.completed:
-            legacy = self._submitted.pop(er.id, None)
+        # mirror engine RequestOutputs back onto the caller's legacy
+        # objects — the v2 engine never mutates its own Request inputs,
+        # but in-place mutation IS the legacy contract this shim preserves
+        for out in self.engine.completed:
+            legacy = self._submitted.pop(out.request_id, None)
             if legacy is not None:
-                legacy.out_tokens = list(er.out_tokens)
+                legacy.out_tokens = list(out.token_ids)
                 legacy.done = True
                 self.completed.append(legacy)
         self.engine.completed.clear()

@@ -3,9 +3,6 @@ optimizer), prefill_step, decode_step.  These are what the launcher jits with
 the ASA plan's in/out shardings and what the dry-run lowers."""
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Optional
-
 import jax
 import jax.numpy as jnp
 
@@ -122,9 +119,15 @@ def make_decode_step(arch: ArchConfig, *, impl: str = "xla",
 # see transformer.init_paged_cache) plus per-sequence position vectors (B,),
 # block tables (B, max_blocks) and slot ids (B,); see layers.paged_attention
 # and mamba2.mamba2_slot.
+#
+# With ``sampler`` (serving.sampling.make_sampler) the steps fuse sampling
+# on device: they take per-row (temperature, top_k, top_p, seed) arrays and
+# return (token (B,), logprob (B,), cache) instead of logits — only a (B,)
+# token vector crosses back to the host, and the sampling key is derived
+# inside the jit from the absolute position of the produced token.
 
 def make_paged_prefill_step(arch: ArchConfig, *, impl: str = "xla",
-                            act_sharding=None):
+                            act_sharding=None, sampler=None):
     """-> prefill(params, cache, tokens (B,C), positions, block_tables,
     new_lens, slot_ids) -> (last_valid_logits (B,V), cache).  Called once
     per prompt *chunk* — the engine interleaves these with decode steps
@@ -132,9 +135,15 @@ def make_paged_prefill_step(arch: ArchConfig, *, impl: str = "xla",
     per row; the chunk is padded to a fixed C so the step traces once, and
     the returned logits are taken at row new_lens-1 (the last real token).
     ``slot_ids`` (B,) maps rows to slot-state pool rows (SSM state carried
-    as h0 across chunks; cross K/V read-only)."""
-    def paged_prefill_step(params, cache, tokens, positions, block_tables,
-                           new_lens, slot_ids):
+    as h0 across chunks; cross K/V read-only).
+
+    With ``sampler`` the signature gains (temperature, top_k, top_p, seeds)
+    row arrays and returns (token (B,), logprob (B,), cache): the token
+    after the chunk is sampled on device at absolute position
+    ``positions + new_lens`` (only meaningful — and only consumed — on the
+    final chunk of a prompt)."""
+    def _last_logits(params, cache, tokens, positions, block_tables,
+                     new_lens, slot_ids):
         out = T.lm_apply(params, arch, tokens, cache=cache,
                          positions=positions, block_tables=block_tables,
                          new_lens=new_lens, slot_ids=slot_ids, impl=impl,
@@ -142,23 +151,50 @@ def make_paged_prefill_step(arch: ArchConfig, *, impl: str = "xla",
         last = jnp.take_along_axis(
             out.logits, (new_lens - 1)[:, None, None], axis=1)
         return last[:, 0], out.cache
+
+    if sampler is None:
+        return _last_logits
+
+    def paged_prefill_step(params, cache, tokens, positions, block_tables,
+                           new_lens, slot_ids, temperature, top_k, top_p,
+                           seeds):
+        last, cache = _last_logits(params, cache, tokens, positions,
+                                   block_tables, new_lens, slot_ids)
+        tok, logp = sampler(last, temperature, top_k, top_p, seeds,
+                            positions + new_lens)
+        return tok, logp, cache
     return paged_prefill_step
 
 
 def make_paged_decode_step(arch: ArchConfig, *, impl: str = "xla",
-                           act_sharding=None):
+                           act_sharding=None, sampler=None):
     """-> decode(params, cache, tokens (B,1), positions, block_tables,
     slot_ids) -> (logits (B,V), cache).  Every batch row advances at its
     *own* position — slots holding idle/prefilling requests point their
     block tables at the null block, their slot_ids at the null slot row,
-    and are masked by the caller."""
-    def paged_decode_step(params, cache, tokens, positions, block_tables,
-                          slot_ids):
+    and are masked by the caller.
+
+    With ``sampler`` the signature gains (temperature, top_k, top_p, seeds)
+    row arrays and returns (token (B,), logprob (B,), cache): the next
+    token is sampled on device at absolute position ``positions + 1`` (the
+    input token lives at ``positions``)."""
+    def _logits(params, cache, tokens, positions, block_tables, slot_ids):
         out = T.lm_apply(params, arch, tokens, cache=cache,
                          positions=positions, block_tables=block_tables,
                          slot_ids=slot_ids, impl=impl,
                          act_sharding=act_sharding)
         return out.logits[:, -1], out.cache
+
+    if sampler is None:
+        return _logits
+
+    def paged_decode_step(params, cache, tokens, positions, block_tables,
+                          slot_ids, temperature, top_k, top_p, seeds):
+        logits, cache = _logits(params, cache, tokens, positions,
+                                block_tables, slot_ids)
+        tok, logp = sampler(logits, temperature, top_k, top_p, seeds,
+                            positions + 1)
+        return tok, logp, cache
     return paged_decode_step
 
 

@@ -9,11 +9,10 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.checkpoint import CheckpointManager
@@ -83,13 +82,13 @@ class Trainer:
             self.arch, self.opt, microbatches=mb, impl=self.cfg.impl,
             remat=self.cfg.remat, act_sharding=act_ns,
             clip_norm=self.cfg.clip_norm)
-        opt_specs_fn = lambda osds: SH.opt_state_specs(osds, pspecs, ms)
+        def opt_specs_fn(osds):
+            return SH.opt_state_specs(osds, pspecs, ms)
         self._jitted = None          # rebuilt lazily with opt specs
         self._step_fn, self._pns, self._opt_specs_fn = step_fn, pns, opt_specs_fn
         return changed
 
     def _jit(self, params, opt_state):
-        ms = mesh_shape_of(self.mesh)
         opt_sds = jax.eval_shape(lambda o: o, opt_state)
         ons = jax.tree.map(lambda s: NamedSharding(self.mesh, s),
                            self._opt_specs_fn(opt_sds))
@@ -161,7 +160,6 @@ class Trainer:
         _, pns, _ = self._specs()
         params = jax.device_put(params, pns)
         # optimizer state: reshard step scalar + moments like params
-        ms = mesh_shape_of(new_mesh)
         opt_sds = jax.eval_shape(lambda o: o, opt_state)
         ons = jax.tree.map(lambda s: NamedSharding(new_mesh, s),
                            self._opt_specs_fn(opt_sds))

@@ -1,4 +1,31 @@
-"""Continuous-batching serving subsystem.
+"""Continuous-batching serving subsystem — Generation API v2.
+
+The public surface is three typed objects plus the engine:
+
+  ``SamplingParams``  per-request decode controls (temperature / top_k /
+                      top_p / seed / stop_token_ids / logprobs), validated
+                      at ``submit``; ``temperature=0`` (default) is exact
+                      greedy argmax.
+  ``Request``         input-only: id, prompt, max_new_tokens, priority,
+                      sampling, optional modality frontend.  The engine
+                      never mutates it.
+  ``RequestOutput``   the result: ``token_ids``, ``finish_reason``
+                      ("stop" | "length"), optional per-token ``logprobs``,
+                      TTFT/TPOT latency joined from ``ServingMetrics``.
+  ``ContinuousBatchingEngine``
+                      ``submit()`` + ``step()`` for manual control,
+                      ``generate(requests)`` submit-and-drain,
+                      ``stream(requests)`` yielding (request_id, token)
+                      pairs, and an ``on_token`` callback.
+
+Migrating from v1: results used to leak out by mutating
+``Request.out_tokens`` in place and setting ``Request.done``; read
+``RequestOutput.token_ids`` / ``finish_reason`` from ``engine.completed``
+(or the return of ``generate()``) instead.  ``Request`` no longer carries
+``out_tokens`` / ``done`` at all, so a finished Request object may be
+resubmitted verbatim.  Greedy decode needs no changes beyond that: the
+default ``SamplingParams()`` is temperature-0 argmax, token-for-token
+identical to v1.
 
 Layers (bottom up):
   paged_cache.py    block-pool KV cache: refcounted free-list allocator +
@@ -15,8 +42,16 @@ Layers (bottom up):
                     paged_cache_specs sharding.
   scheduler.py      admission scheduler: FCFS within priority classes,
                     max-tokens-in-flight budgeting, preemption victim choice.
+  sampling.py       SamplingParams + the batched per-slot sampler fused
+                    into the jitted paged steps: per-row temperature /
+                    top-k / top-p / seed arrays, Gumbel categorical on
+                    device, keys derived as fold_in(seed, absolute
+                    position) so recompute-preemption regenerates
+                    identical tokens (which keeps prefix-cache hash
+                    chains re-matchable).
   metrics.py        per-request TTFT/TPOT + queue depth / slot occupancy /
-                    tokens-per-second counters, emitted as JSON.
+                    tokens-per-second counters, emitted as JSON; one
+                    injectable engine clock stamps every lifecycle point.
   engine.py         the continuous-batching engine: per-slot decode
                     positions, admission into freed slots every step,
                     chunked prefill interleaved with decode; serves every
@@ -35,11 +70,14 @@ pre-shim wave implementation is pinned in tests/goldens_serving.json).
 """
 from repro.serving.cache_manager import (PAGEABLE_KINDS, SLOT_STATE_KINDS,
                                          UnifiedCacheManager)
-from repro.serving.engine import ContinuousBatchingEngine, Request
+from repro.serving.engine import (ContinuousBatchingEngine, Request,
+                                  RequestOutput)
 from repro.serving.metrics import ServingMetrics
 from repro.serving.paged_cache import BlockAllocator, PagedKVCache
+from repro.serving.sampling import GREEDY, SamplingParams
 from repro.serving.scheduler import RequestScheduler
 
-__all__ = ["ContinuousBatchingEngine", "Request", "ServingMetrics",
-           "BlockAllocator", "PagedKVCache", "UnifiedCacheManager",
-           "RequestScheduler", "PAGEABLE_KINDS", "SLOT_STATE_KINDS"]
+__all__ = ["ContinuousBatchingEngine", "Request", "RequestOutput",
+           "SamplingParams", "GREEDY", "ServingMetrics", "BlockAllocator",
+           "PagedKVCache", "UnifiedCacheManager", "RequestScheduler",
+           "PAGEABLE_KINDS", "SLOT_STATE_KINDS"]

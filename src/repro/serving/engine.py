@@ -4,6 +4,32 @@ admission into freed slots every step, chunked prefill interleaved with
 decode.  This is the ONLY decode path — the wave-synchronized Server was
 retired to a compatibility shim delegating here (runtime/server.py).
 
+Generation API v2: requests and results are two typed objects.
+
+  ``Request``        input-only — id, prompt, ``SamplingParams``, priority,
+                     optional frontend.  The engine NEVER mutates it;
+                     generation state lives in an internal per-request
+                     record, so a finished Request may be resubmitted
+                     verbatim.
+  ``RequestOutput``  what comes back — token ids, ``finish_reason``
+                     ("stop" on a stop-token hit, "length" on the
+                     max_new_tokens / max_len budget), optional per-token
+                     logprobs, and TTFT/TPOT joined from ServingMetrics.
+
+Entry points: ``submit()`` + ``step()``/``run_until_drained()`` for full
+control, ``generate(requests)`` for submit-and-drain, ``stream(requests)``
+to iterate (request_id, token) pairs as they are sampled, and an
+``on_token`` callback fired for every sampled token.
+
+Sampling (serving/sampling.py) is fused into the jitted paged steps: each
+batch row carries its own (temperature, top_k, top_p, seed), so one traced
+shape serves mixed per-request parameters — greedy rows (temperature=0
+lowers exactly to argmax) ride alongside nucleus-sampled rows, and only a
+(B,) token vector returns to the host per step.  Sampling keys derive as
+``fold_in(seed, absolute_position)``, which makes a recompute-preempted
+request regenerate bit-identical tokens — required for its prefix-cache
+blocks to re-match at re-admission.
+
 Every architecture in the zoo is served.  Each batch row carries its own
 position vector, block table and slot-state row, so a finished request's
 slot (and its cache blocks) are reused on the very next step, and a long
@@ -38,10 +64,16 @@ Engine step = admit -> one prefill chunk -> one decode step:
      re-admission re-zeroes the row, and a sharing request re-matches its
      own retired blocks).
 
+All request-lifecycle timestamps (submit / first token / finish) come from
+one injectable ``clock`` — tests pass a synthetic clock and get coherent
+TTFT/TPOT instead of mixing fake submit times with real perf_counter
+stamps.
+
 Greedy decode is token-for-token identical to the retired wave Server: the
 paged attention paths mask exactly the same prefix (layers._paged_sdpa,
-mla.mla_paged_attention) and the slot-state path runs the same recurrence
-on gathered rows.  tests/test_serving.py pins this against golden token
+mla.mla_paged_attention), the slot-state path runs the same recurrence on
+gathered rows, and temperature=0 sampling is a bare argmax inside the
+fused sampler.  tests/test_serving.py pins this against golden token
 sequences frozen from the pre-shim wave implementation, for every arch
 family, including under forced preemption and on a multi-host (data=4,
 model=2) mesh.
@@ -50,7 +82,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Optional
+from typing import Callable, Iterable, Iterator, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -64,37 +96,107 @@ from repro.runtime import steps as ST
 from repro.serving.cache_manager import UnifiedCacheManager, check_servable
 from repro.serving.metrics import ServingMetrics
 from repro.serving.paged_cache import PagedCacheConfig, blocks_for
+from repro.serving.sampling import GREEDY, SamplingParams, make_sampler
 from repro.serving.scheduler import RequestScheduler
 
 
 @dataclasses.dataclass
 class Request:
+    """Input-only request description (API v2).
+
+    The engine never mutates a Request: generated tokens, finish reason,
+    logprobs and latency come back as a ``RequestOutput`` (via
+    ``engine.completed``, ``generate()`` or ``stream()``).  Because no
+    state sticks to the object, a finished Request may be resubmitted
+    as-is (its id must simply not be in flight).
+    """
     id: int
     prompt: np.ndarray               # (S,) int32
     max_new_tokens: int = 16
     priority: int = 0                # lower = more urgent
+    sampling: SamplingParams = GREEDY
     # per-request modality input, consumed ONCE at admission: vision patch
     # embeddings (1, n_img_tokens, d_model) -> cross-attn K/V rows, or audio
     # frame embeddings (1, enc_len, d_model) -> encoder pass -> wdec cross
     # K/V rows (transformer.admit_slot)
     frontend: Optional[np.ndarray] = None
+
+
+@dataclasses.dataclass
+class RequestOutput:
+    """Typed generation result (API v2).
+
+    finish_reason  "stop"   — a ``stop_token_ids`` member was sampled (it
+                              is the last entry of ``token_ids``);
+                   "length" — the max_new_tokens / max_len budget ran out.
+    logprobs       per-token log-probabilities under the distribution each
+                   token was sampled from; None unless the request's
+                   ``SamplingParams.logprobs`` was set.
+    ttft_s/tpot_s  joined from ServingMetrics at finish time (None if the
+                   engine ran without timestamps for this request).
+    """
+    request_id: int
+    token_ids: list
+    finish_reason: str               # "stop" | "length"
+    prompt_len: int = 0
+    logprobs: Optional[list] = None
+    ttft_s: Optional[float] = None
+    tpot_s: Optional[float] = None
+
+    @property
+    def n_tokens(self) -> int:
+        return len(self.token_ids)
+
+
+@dataclasses.dataclass
+class _ReqState:
+    """Engine-internal mutable generation state for one in-flight request.
+
+    Quacks like the scheduler's request protocol (id / prompt /
+    max_new_tokens / priority / out_tokens / _sched_seq), keeping
+    RequestScheduler oblivious to the API split; the public Request stays
+    untouched.
+    """
+    req: Request
+    seed: int                        # effective seed (params.seed or req.id)
+    stop_ids: frozenset
     out_tokens: list = dataclasses.field(default_factory=list)
-    done: bool = False
+    logprobs: Optional[list] = None  # [] iff params.logprobs else None
     _sched_seq: Optional[int] = None   # set by RequestScheduler (FCFS order)
     _charged_footprint: Optional[int] = None   # budget charge at admission
+
+    @property
+    def id(self) -> int:
+        return self.req.id
+
+    @property
+    def prompt(self) -> np.ndarray:
+        return self.req.prompt
+
+    @property
+    def max_new_tokens(self) -> int:
+        return self.req.max_new_tokens
+
+    @property
+    def priority(self) -> int:
+        return self.req.priority
+
+    @property
+    def sampling(self) -> SamplingParams:
+        return self.req.sampling
 
     def context(self) -> np.ndarray:
         """prompt + generated-so-far — what a (re-)prefill must cover."""
         if not self.out_tokens:
-            return np.asarray(self.prompt, np.int32)
-        return np.concatenate([np.asarray(self.prompt, np.int32),
+            return np.asarray(self.req.prompt, np.int32)
+        return np.concatenate([np.asarray(self.req.prompt, np.int32),
                                np.asarray(self.out_tokens, np.int32)])
 
 
 @dataclasses.dataclass
 class _Slot:
     idx: int = 0                     # engine slot index == state-pool row
-    req: Optional[Request] = None
+    req: Optional[_ReqState] = None
     state: str = "idle"              # idle | prefill | decode
     pos: int = 0                     # tokens currently resident in the cache
     prefill_pos: int = 0             # prompt tokens already prefilled
@@ -112,11 +214,17 @@ class ContinuousBatchingEngine:
                  share_prefix: bool = False,
                  scheduler: Optional[RequestScheduler] = None,
                  asa: Optional[AdaptiveScheduler] = None,
-                 metrics: Optional[ServingMetrics] = None):
+                 metrics: Optional[ServingMetrics] = None,
+                 clock: Callable[[], float] = time.perf_counter,
+                 on_token: Optional[Callable[[int, int], None]] = None):
         check_servable(arch)           # precise error for excluded archs
         self.arch, self.mesh = arch, mesh
         self.max_len, self.prefill_chunk = max_len, prefill_chunk
         self.share_prefix = share_prefix
+        self._clock = clock
+        # on_token(request_id, token_id): fired for every sampled token,
+        # in sampling order — the streaming hook stream() builds on
+        self.on_token = on_token
         max_blocks_per_seq = blocks_for(max_len, block_size)
         if num_blocks is None:
             num_blocks = slots * max_blocks_per_seq + 1   # +1: null block
@@ -131,10 +239,13 @@ class ContinuousBatchingEngine:
         self.params = jax.device_put(
             params, jax.tree.map(lambda s: NamedSharding(mesh, s),
                                  self.plan.param_specs()))
-        self._prefill = jax.jit(ST.make_paged_prefill_step(arch),
-                                donate_argnums=(1,))
-        self._decode = jax.jit(ST.make_paged_decode_step(arch),
-                               donate_argnums=(1,))
+        sampler = make_sampler(arch.vocab)
+        self._prefill = jax.jit(
+            ST.make_paged_prefill_step(arch, sampler=sampler),
+            donate_argnums=(1,))
+        self._decode = jax.jit(
+            ST.make_paged_decode_step(arch, sampler=sampler),
+            donate_argnums=(1,))
         self._admit_slot_state = jax.jit(
             ST.make_slot_admit_step(arch), donate_argnums=(1,)) \
             if self.cache.has_slot_state else None
@@ -148,11 +259,14 @@ class ContinuousBatchingEngine:
         self.scheduler.footprint_cap = self.max_len
         self.metrics = metrics or ServingMetrics()
         self.slots = [_Slot(idx=i) for i in range(slots)]
-        self.completed: list[Request] = []
-        self._active_ids: set[int] = set()   # queued or running request ids
+        self.completed: list[RequestOutput] = []
+        self._states: dict[int, _ReqState] = {}   # queued or running
 
     # ------------------------------------------------------------------
-    def submit(self, req: Request, now: Optional[float] = None) -> None:
+    def _validate(self, req: Request) -> None:
+        """Every reject-at-submit check, with NO state change — so
+        ``generate()`` can vet a whole batch before putting any of it in
+        flight."""
         if len(req.prompt) == 0:
             raise ValueError(f"request {req.id} has an empty prompt")
         if req.max_new_tokens < 1:
@@ -161,50 +275,96 @@ class ContinuousBatchingEngine:
             # samples its first token — reject instead of emitting one
             raise ValueError(f"request {req.id}: max_new_tokens must be "
                              f">= 1 (got {req.max_new_tokens})")
-        if req.done or req.out_tokens or req._sched_seq is not None:
-            # a recycled Request object would re-prefill its old output as
-            # context and jump the FCFS queue with its stale arrival seq
-            raise ValueError(
-                f"request {req.id} has already been served (done={req.done}, "
-                f"{len(req.out_tokens)} generated tokens) — submit a fresh "
-                f"Request object")
         if len(req.prompt) >= self.max_len:
             raise ValueError(f"prompt ({len(req.prompt)}) >= max_len")
-        if req.id in self._active_ids:
+        if req.id in self._states:
             # block tables are keyed by request id — a duplicate would share
             # (and corrupt) the live request's table
             raise ValueError(f"request id {req.id} is already in flight")
+        try:
+            req.sampling.validate(self.arch.vocab)
+        except ValueError as e:      # reject-at-submit, like the shape checks
+            raise ValueError(f"request {req.id}: {e}") from None
         if blocks_for(self._target_total(req), self.cache.cfg.block_size) \
                 > self.cache.cfg.num_blocks - 1:
             raise ValueError(f"request {req.id} can never fit the block pool")
-        self.scheduler.submit(req)       # may raise (token budget) — only a
-        self._active_ids.add(req.id)     # queued request claims its id
-        self.metrics.on_submit(req.id, now)
+        self.scheduler.check_submittable(req)
 
-    def _target_total(self, req: Request) -> int:
+    def submit(self, req: Request, now: Optional[float] = None) -> None:
+        self._validate(req)
+        sp = req.sampling
+        st = _ReqState(
+            req=req,
+            # distinct requests get distinct streams by default, but the
+            # effective seed depends only on stable request identity, never
+            # on scheduling — preemption re-derives the same keys
+            seed=(sp.seed if sp.seed is not None else req.id % (2 ** 32)),
+            stop_ids=frozenset(sp.stop_token_ids),
+            logprobs=[] if sp.logprobs else None)
+        self.scheduler.submit(st)        # may raise (token budget) — only a
+        self._states[req.id] = st        # queued request claims its id
+        self.metrics.on_submit(req.id, self._clock() if now is None else now)
+
+    def _target_total(self, req) -> int:
         # same self-truncation as the wave Server's max_len loop bound
+        # (req is a Request or a _ReqState — both carry the two fields)
         return min(len(req.prompt) + req.max_new_tokens, self.max_len)
 
     # ------------------------------------------------------------------
-    def _sample(self, logits) -> np.ndarray:
-        logits = np.asarray(logits, np.float32)[:, : self.arch.vocab]
-        return np.argmax(logits, axis=-1).astype(np.int32)
+    def _sampling_rows(self, states: Sequence[Optional[_ReqState]]):
+        """Per-row sampler parameter arrays for a batch of (possibly None)
+        request states — None rows get greedy params and are discarded by
+        the caller."""
+        n = len(states)
+        temp = np.zeros((n,), np.float32)
+        top_k = np.zeros((n,), np.int32)
+        top_p = np.ones((n,), np.float32)
+        seeds = np.zeros((n,), np.uint32)
+        for i, st in enumerate(states):
+            if st is None:
+                continue
+            sp = st.sampling
+            temp[i], top_k[i], top_p[i] = sp.temperature, sp.top_k, sp.top_p
+            seeds[i] = st.seed
+        return (jnp.asarray(temp), jnp.asarray(top_k), jnp.asarray(top_p),
+                jnp.asarray(seeds))
 
-    def _finish(self, slot: _Slot) -> None:
-        req = slot.req
-        req.done = True
-        self.cache.release(req.id)
-        self.scheduler.on_finish(req)
-        self.metrics.on_finish(req.id, len(req.out_tokens))
-        self._active_ids.discard(req.id)
-        self.completed.append(req)
+    def _record_token(self, slot: _Slot, tok: int, logp: float) \
+            -> Optional[str]:
+        """Append one sampled token to the slot's request and return its
+        finish reason, if any ("stop" wins when a stop token lands exactly
+        on the length budget — it genuinely terminated the stream)."""
+        st = slot.req
+        st.out_tokens.append(tok)
+        if st.logprobs is not None:
+            st.logprobs.append(logp)
+        if self.on_token is not None:
+            self.on_token(st.id, tok)
+        if tok in st.stop_ids:
+            return "stop"
+        if len(st.req.prompt) + len(st.out_tokens) >= self._target_total(st):
+            return "length"
+        return None
+
+    def _finish(self, slot: _Slot, reason: str) -> None:
+        st = slot.req
+        self.cache.release(st.id)
+        self.scheduler.on_finish(st)
+        self.metrics.on_finish(st.id, len(st.out_tokens), self._clock())
+        del self._states[st.id]
+        rep = self.metrics.request_report(st.id)
+        self.completed.append(RequestOutput(
+            request_id=st.id, token_ids=list(st.out_tokens),
+            finish_reason=reason, prompt_len=len(st.req.prompt),
+            logprobs=None if st.logprobs is None else list(st.logprobs),
+            ttft_s=rep["ttft_s"], tpot_s=rep["tpot_s"]))
         slot.req, slot.state, slot.pos, slot.prefill_pos = None, "idle", 0, 0
 
     def _preempt(self, slot: _Slot) -> None:
-        req = slot.req
-        self.cache.release(req.id)
-        self.scheduler.preempt(req)
-        self.metrics.on_preempt(req.id)
+        st = slot.req
+        self.cache.release(st.id)
+        self.scheduler.preempt(st)
+        self.metrics.on_preempt(st.id)
         slot.req, slot.state, slot.pos, slot.prefill_pos = None, "idle", 0, 0
 
     # -- phase 1: admission --------------------------------------------
@@ -221,16 +381,16 @@ class ContinuousBatchingEngine:
                     raise RuntimeError(
                         f"request {head.id} cannot fit an empty pool")
                 break                      # wait for running requests to free
-            req = self.scheduler.next_admission()
-            if req is None:                # token budget exhausted
+            st = self.scheduler.next_admission()
+            if st is None:                 # token budget exhausted
                 break
             # longest cached full-block prefix: refcounts bump, the table
             # starts populated, and prefill starts at the matched boundary
             # (no-op with share_prefix off)
-            n_cached = self.cache.assign_prefix(req.id, ctx)
-            ok = self.cache.reserve(req.id, len(ctx))
+            n_cached = self.cache.assign_prefix(st.id, ctx)
+            ok = self.cache.reserve(st.id, len(ctx))
             assert ok, "can_fit_request passed but reserve failed"
-            slot.req, slot.state = req, "prefill"
+            slot.req, slot.state = st, "prefill"
             slot.pos, slot.prefill_pos = n_cached, n_cached
             if self.share_prefix:
                 self.metrics.on_prefix_match(n_cached, len(ctx))
@@ -239,8 +399,8 @@ class ContinuousBatchingEngine:
                 # cross K/V from the request's frontend, computed once)
                 args = (self.params, self.cache.pools,
                         jnp.asarray(slot.idx, jnp.int32))
-                if req.frontend is not None:
-                    args += (jnp.asarray(req.frontend),)
+                if st.req.frontend is not None:
+                    args += (jnp.asarray(st.req.frontend),)
                 self.cache.pools = self._admit_slot_state(*args)
 
     # -- phase 2: one chunk of prefill ---------------------------------
@@ -252,30 +412,33 @@ class ContinuousBatchingEngine:
         if not prefilling:
             return
         slot = min(prefilling, key=lambda s: s.req._sched_seq)
-        req = slot.req
-        ctx = req.context()
+        st = slot.req
+        ctx = st.context()
         chunk = ctx[slot.prefill_pos: slot.prefill_pos + self.prefill_chunk]
         n_new = len(chunk)
         if n_new < self.prefill_chunk:      # pad: the step traces one shape
             chunk = np.concatenate(
                 [chunk, np.zeros(self.prefill_chunk - n_new, np.int32)])
-        table = self.cache.table_array([req.id])
-        logits, self.cache.pools = self._prefill(
+        table = self.cache.table_array([st.id])
+        tok, logp, self.cache.pools = self._prefill(
             self.params, self.cache.pools, jnp.asarray(chunk[None, :]),
             jnp.asarray([slot.prefill_pos], jnp.int32), jnp.asarray(table),
             jnp.asarray([n_new], jnp.int32),
-            jnp.asarray([slot.idx], jnp.int32))
+            jnp.asarray([slot.idx], jnp.int32),
+            *self._sampling_rows([st]))
         slot.prefill_pos += n_new
         slot.pos = slot.prefill_pos
-        self.cache.commit_prefix(req.id, ctx, slot.prefill_pos)
+        self.cache.commit_prefix(st.id, ctx, slot.prefill_pos)
         self.metrics.prefill_chunks += 1
         if slot.prefill_pos == len(ctx):
-            nxt = self._sample(logits)
-            req.out_tokens.append(int(nxt[0]))
-            self.metrics.on_first_token(req.id)
-            slot.state = "decode"
-            if len(ctx) + 1 >= self._target_total(req):
-                self._finish(slot)
+            # the fused sampler produced this chunk's next token at absolute
+            # position len(ctx) — only the final chunk's draw is real
+            self.metrics.on_first_token(st.id, self._clock())
+            reason = self._record_token(slot, int(tok[0]), float(logp[0]))
+            if reason is not None:
+                self._finish(slot, reason)
+            else:
+                slot.state = "decode"
 
     # -- phase 3: one decode step for every decoding slot --------------
     def _decode_step(self) -> None:
@@ -313,26 +476,30 @@ class ContinuousBatchingEngine:
         # reset/advance the pool row at idx, and the two may diverge)
         sids = self.cache.slot_ids_array(
             [s.idx if s.state == "decode" else None for s in self.slots])
-        logits, self.cache.pools = self._decode(
+        tok, logp, self.cache.pools = self._decode(
             self.params, self.cache.pools, jnp.asarray(last),
-            jnp.asarray(pos), jnp.asarray(table), jnp.asarray(sids))
-        nxt = self._sample(logits)
+            jnp.asarray(pos), jnp.asarray(table), jnp.asarray(sids),
+            *self._sampling_rows(
+                [s.req if s.state == "decode" else None for s in self.slots]))
+        nxt = np.asarray(tok)
+        lps = np.asarray(logp)
         self.metrics.decode_steps += 1
         for i, s in enumerate(self.slots):
             if s.state != "decode":
                 continue
             s.pos += 1
-            s.req.out_tokens.append(int(nxt[i]))
+            reason = self._record_token(s, int(nxt[i]), float(lps[i]))
             if self.share_prefix and s.pos % self.cache.cfg.block_size == 0:
                 # a block just filled: generated tokens extend the hash
                 # chain too, so a preempted request re-matches its own
                 # retired blocks at re-admission.  Gated on the boundary —
                 # rebuilding context() every token would be O(n^2) per
-                # request in the decode hot loop
+                # request in the decode hot loop.  Committed even when the
+                # request finishes right here: the block retires to the LRU
+                # index and stays matchable
                 self.cache.commit_prefix(s.req.id, s.req.context(), s.pos)
-            if len(s.req.prompt) + len(s.req.out_tokens) \
-                    >= self._target_total(s.req):
-                self._finish(s)
+            if reason is not None:
+                self._finish(s, reason)
 
     # ------------------------------------------------------------------
     def step(self) -> None:
@@ -359,7 +526,7 @@ class ContinuousBatchingEngine:
         preempt, finish, admit nor drain anything — a stuck engine (e.g. a
         token budget that can never re-admit) must fail loudly instead of
         spinning forever."""
-        t0 = time.perf_counter()
+        t0 = self._clock()
         idle, marker = 0, self._progress_marker()
         while self.has_work:
             self.step()
@@ -372,4 +539,58 @@ class ContinuousBatchingEngine:
                     f"({self.scheduler.queue_depth} queued, "
                     f"{sum(s.busy for s in self.slots)} busy slots) — "
                     f"admission is wedged")
-        return time.perf_counter() - t0
+        return self._clock() - t0
+
+    # -- v2 entry points ------------------------------------------------
+    def generate(self, requests: Iterable[Request]) -> list[RequestOutput]:
+        """Submit every request, run the engine until drained, and return
+        their ``RequestOutput``s in the order given (independent of finish
+        order).  Outputs also accumulate on ``self.completed``.  The whole
+        batch is validated before ANY request is submitted, so a malformed
+        entry raises with nothing newly in flight."""
+        reqs = list(requests)
+        seen: set[int] = set()
+        for r in reqs:
+            self._validate(r)
+            if r.id in seen:
+                raise ValueError(f"request id {r.id} appears twice in the "
+                                 f"batch")
+            seen.add(r.id)
+        for r in reqs:
+            self.submit(r)
+        self.run_until_drained()
+        by_id = {o.request_id: o for o in self.completed}  # latest id wins
+        return [by_id[r.id] for r in reqs]
+
+    def stream(self, requests: Iterable[Request]) \
+            -> Iterator[tuple[int, int]]:
+        """Submit every request (eagerly, before returning — the requests
+        are in flight even if the iterator is never advanced) and step the
+        engine as the returned iterator is consumed, yielding
+        ``(request_id, token_id)`` pairs in sampling order as they are
+        produced — including tokens of requests that were already in
+        flight.  A caller-installed ``on_token`` keeps firing too.
+        Abandoning the iterator mid-stream leaves the engine with work in
+        flight (resume with ``step()``/``run_until_drained()``)."""
+        for r in requests:
+            self.submit(r)
+
+        def _drive() -> Iterator[tuple[int, int]]:
+            buf: list[tuple[int, int]] = []
+            prev = self.on_token
+
+            def tap(rid: int, tok: int) -> None:
+                if prev is not None:
+                    prev(rid, tok)
+                buf.append((rid, tok))
+
+            self.on_token = tap
+            try:
+                while self.has_work:
+                    self.step()
+                    while buf:
+                        yield buf.pop(0)
+            finally:
+                self.on_token = prev
+
+        return _drive()

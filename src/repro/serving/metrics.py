@@ -1,12 +1,18 @@
 """Serving metrics: per-request TTFT/TPOT plus engine-level counters.
 
-All timestamps are caller-supplied ``time.perf_counter()`` floats (the
-engine owns the clock; tests pass synthetic times).  A request that has not
-reached a lifecycle point yet reports ``None`` for the latencies that
-depend on it (an in-flight request has no finish time — subtracting a
-missing timestamp used to fabricate large negative TTFT/TPOT) and is
-skipped by the ``summary()`` means.  ``to_json()`` emits the full report;
-``write()`` drops it next to the benchmark outputs.
+All timestamps are caller-supplied floats from ONE clock: the engine
+stamps every lifecycle point (submit / first token / finish) with its
+injectable ``clock``, so a test driving the engine with a synthetic clock
+gets coherent TTFT/TPOT end to end — the old split (synthetic submit
+times, real ``perf_counter()`` first-token stamps) fabricated bogus
+latencies.  A request that has not reached a lifecycle point yet reports
+``None`` for the latencies that depend on it (an in-flight request has no
+finish time — subtracting a missing timestamp used to fabricate large
+negative TTFT/TPOT) and is skipped by the ``summary()`` means.
+``summary()`` reports EVERY submitted id — in-flight requests appear with
+``None`` latencies and are counted in ``in_flight`` instead of silently
+vanishing.  ``to_json()`` emits the full report; ``write()`` drops it next
+to the benchmark outputs.
 
 Cache pressure: the engine samples ``PagedKVCache.utilization`` every step
 (``block_utilization_mean/max``) and reports prefix-cache admission
@@ -30,6 +36,13 @@ class ServingMetrics:
         self.first_token_t: dict[int, float] = {}
         self.finish_t: dict[int, float] = {}
         self.token_counts: dict[int, int] = {}
+        # engine-lifetime aggregates: the per-id dicts above hold only the
+        # LATEST lifecycle of a reused id, so completions/tokens/span must
+        # accumulate separately or a resubmitted id silently deflates them
+        self.finished_requests = 0
+        self.finished_tokens = 0
+        self._first_submit_t: Optional[float] = None
+        self._last_finish_t: Optional[float] = None
         self.queue_depth_samples: list[int] = []
         self.occupancy_samples: list[float] = []
         self.block_utilization_samples: list[float] = []
@@ -42,7 +55,19 @@ class ServingMetrics:
 
     # -- request lifecycle --------------------------------------------------
     def on_submit(self, rid: int, now: Optional[float] = None):
-        self.submit_t[rid] = time.perf_counter() if now is None else now
+        t = time.perf_counter() if now is None else now
+        self.submit_t[rid] = t
+        if self._first_submit_t is None or t < self._first_submit_t:
+            self._first_submit_t = t
+        # a reused id (finished request resubmitted, or a fresh request
+        # recycling it) starts a NEW lifecycle: without this, the
+        # first-write-wins on_first_token kept the PREVIOUS run's stamp and
+        # fabricated a negative TTFT (first < submit).  Preemption-resume
+        # never passes through here, so its TTFT preservation is unaffected;
+        # the finished_* aggregates keep the old run's contribution.
+        self.first_token_t.pop(rid, None)
+        self.finish_t.pop(rid, None)
+        self.token_counts.pop(rid, None)
 
     def on_first_token(self, rid: int, now: Optional[float] = None):
         # only the first time: a preempted+resumed request keeps its TTFT
@@ -50,8 +75,13 @@ class ServingMetrics:
             self.first_token_t[rid] = time.perf_counter() if now is None else now
 
     def on_finish(self, rid: int, n_tokens: int, now: Optional[float] = None):
-        self.finish_t[rid] = time.perf_counter() if now is None else now
+        t = time.perf_counter() if now is None else now
+        self.finish_t[rid] = t
         self.token_counts[rid] = n_tokens
+        self.finished_requests += 1
+        self.finished_tokens += n_tokens
+        if self._last_finish_t is None or t > self._last_finish_t:
+            self._last_finish_t = t
 
     def on_preempt(self, rid: int):
         self.preemptions += 1
@@ -90,17 +120,25 @@ class ServingMetrics:
         return {"id": rid, "n_tokens": n, "ttft_s": ttft, "tpot_s": tpot}
 
     def summary(self) -> dict:
-        reqs = [self.request_report(r) for r in sorted(self.finish_t)]
+        # every submitted id, finished or not — submitted-but-unfinished
+        # requests used to vanish from the report entirely even though
+        # request_report handles them (None latencies)
+        all_ids = sorted(set(self.submit_t) | set(self.finish_t))
+        reqs = [self.request_report(r) for r in all_ids]
         ttfts = [r["ttft_s"] for r in reqs if r["ttft_s"] is not None]
         tpots = [r["tpot_s"] for r in reqs if r["tpot_s"] is not None]
-        total_tokens = sum(self.token_counts.values())
-        if self.submit_t and self.finish_t:
-            span = max(self.finish_t.values()) - min(self.submit_t.values())
+        # engine-lifetime totals (NOT sums over the per-id dicts, which only
+        # hold a reused id's latest lifecycle)
+        total_tokens = self.finished_tokens
+        if self._first_submit_t is not None and self._last_finish_t is not None:
+            span = self._last_finish_t - self._first_submit_t
         else:
             span = 0.0
         return {
             "requests": reqs,
-            "completed": len(self.finish_t),
+            "completed": self.finished_requests,
+            "in_flight": sum(1 for r in self.submit_t
+                             if r not in self.finish_t),
             "total_tokens": total_tokens,
             "tokens_per_sec": total_tokens / span if span > 0 else 0.0,
             "ttft_mean_s": _mean(ttfts),

@@ -1,0 +1,209 @@
+"""Per-request sampling for the continuous-batching engine (API v2).
+
+Two pieces:
+
+``SamplingParams``
+    The per-request decode controls — temperature / top-k / top-p, an
+    explicit seed, stop token ids and a logprobs flag — validated once at
+    ``engine.submit`` so a malformed request never reaches a jitted step.
+    ``temperature=0`` (the default) is exact greedy argmax.
+
+``make_sampler(vocab)``
+    A single *batched* sample function, fused as the tail of the jitted
+    paged prefill/decode steps (runtime/steps.py): every batch row carries
+    its own ``(temperature, top_k, top_p, seed, position)``, so one traced
+    shape serves arbitrary per-request parameter mixes — greedy rows ride
+    in the same step as nucleus-sampled rows, and idle slots are just
+    greedy rows whose output the engine discards.  Fusing the sampler on
+    device also means only a ``(B,)`` token vector (not ``(B, vocab)``
+    logits) crosses back to the host per step.
+
+Determinism is load-bearing, not cosmetic.  The sampling key for a token
+is ``fold_in(PRNGKey(seed), absolute_position)`` — a pure function of the
+request's seed and the token's absolute position in the sequence
+(``len(prompt) + k`` for the k-th generated token), with **no** dependence
+on batch row, engine step count, or scheduling history.  A
+recompute-preempted request therefore re-generates bit-identical tokens
+when its context is re-prefilled: the resumed request reaches the same
+absolute positions with the same logits (greedy-parity infrastructure) and
+the same keys.  That in turn is what keeps the prefix-cache hash chain
+stable — a preempted ``share_prefix`` request can only re-match its own
+retired blocks if the tokens it regenerates are identical to the ones it
+committed.
+
+Masking semantics (property-tested in tests/test_serving.py):
+  * top-k keeps the k highest-scoring tokens (ties at the k-th value are
+    all kept); ``top_k=0`` disables the filter;
+  * top-p keeps the smallest probability-sorted prefix of the vocabulary
+    whose cumulative mass reaches ``top_p`` — the kept mass is always
+    >= top_p and the candidate set is never empty (the argmax survives
+    any ``top_p > 0``);
+  * ``temperature == 0`` bypasses both masks and the Gumbel draw entirely
+    and lowers to ``argmax`` over the raw float32 logits, bit-for-bit the
+    greedy path the serving goldens pin.
+"""
+from __future__ import annotations
+
+import dataclasses
+import numbers
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["SamplingParams", "GREEDY", "make_sampler",
+           "apply_top_k", "apply_top_p"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request decode controls, validated at ``engine.submit``.
+
+    temperature    0.0 => exact greedy argmax (top_k/top_p/seed ignored);
+                   > 0 scales logits before the top-k/top-p masks.
+    top_k          keep only the k highest logits (0 disables).
+    top_p          nucleus sampling: keep the smallest probability-sorted
+                   set with cumulative mass >= top_p (1.0 disables).
+    seed           RNG seed for this request's token stream.  ``None`` lets
+                   the engine derive one from the request id — still fully
+                   deterministic (and preemption-stable), but distinct
+                   requests get distinct streams by default.
+    stop_token_ids sampling any of these ids finishes the request with
+                   ``finish_reason="stop"``.  The stop token IS the last
+                   entry of ``RequestOutput.token_ids`` — it was genuinely
+                   sampled, and keeping it makes recompute-preemption and
+                   prefix-cache commits see the true context.
+    logprobs       when True the ``RequestOutput`` carries one logprob per
+                   generated token, under the distribution it was actually
+                   sampled from (post-mask, post-temperature; the raw
+                   softmax for greedy rows).
+    """
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: Optional[int] = None
+    stop_token_ids: tuple = ()
+    logprobs: bool = False
+
+    def validate(self, vocab: Optional[int] = None) -> None:
+        """Raise ValueError on any parameter a jitted step can't honor.
+        numbers.Integral/Real so numpy scalars (np.int32 stop ids sliced
+        from a prompt array, np.float32 temperature) are accepted."""
+        t = self.temperature
+        if not isinstance(t, numbers.Real) or t != t or t < 0 \
+                or t == float("inf"):
+            raise ValueError(f"temperature must be a finite float >= 0 "
+                             f"(got {t!r})")
+        if not isinstance(self.top_k, numbers.Integral) or self.top_k < 0:
+            raise ValueError(f"top_k must be an int >= 0, 0 disabling the "
+                             f"filter (got {self.top_k!r})")
+        if vocab is not None and self.top_k > vocab:
+            raise ValueError(f"top_k ({self.top_k}) exceeds the vocabulary "
+                             f"({vocab})")
+        p = self.top_p
+        if not isinstance(p, numbers.Real) or not 0.0 < p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1] (got {p!r})")
+        if self.seed is not None \
+                and not (isinstance(self.seed, numbers.Integral)
+                         and 0 <= self.seed < 2 ** 32):
+            raise ValueError(f"seed must be None or an int in [0, 2**32) "
+                             f"(got {self.seed!r})")
+        for s in self.stop_token_ids:
+            if not isinstance(s, numbers.Integral):
+                raise ValueError(f"stop token id {s!r} is not an integer")
+            if s < 0 or (vocab is not None and s >= vocab):
+                raise ValueError(f"stop token id {int(s)} outside the "
+                                 f"vocabulary [0, {vocab})")
+
+
+GREEDY = SamplingParams()
+
+
+def apply_top_k(logits, top_k):
+    """Mask all but the per-row ``top_k`` highest logits to -inf.
+
+    ``logits`` (B, V) float; ``top_k`` (B,) int32, 0 = keep everything.
+    Ties at the k-th value are all kept (the mask is a value threshold,
+    not an index cut), so the candidate set never loses probability mass
+    to an arbitrary tiebreak.
+    """
+    v = logits.shape[-1]
+    k = jnp.where(top_k > 0, top_k, v)
+    desc = -jnp.sort(-logits, axis=-1)
+    kth = jnp.take_along_axis(desc, jnp.clip(k - 1, 0, v - 1)[:, None],
+                              axis=-1)
+    return jnp.where(logits >= kth, logits, -jnp.inf)
+
+
+def apply_top_p(logits, top_p):
+    """Nucleus mask: per row, keep the smallest probability-sorted prefix
+    of the vocabulary whose cumulative softmax mass reaches ``top_p``.
+
+    ``logits`` (B, V) float (may already hold -inf from top-k); ``top_p``
+    (B,) float in (0, 1].  Kept mass is always >= top_p; the set is never
+    empty (the first sorted token has zero exclusive mass, which is
+    < top_p for any top_p > 0).  Ties at the threshold probability are
+    all kept.
+    """
+    probs = jax.nn.softmax(logits, axis=-1)
+    desc = -jnp.sort(-probs, axis=-1)
+    cum = jnp.cumsum(desc, axis=-1)
+    # keep sorted slot j iff the mass strictly before it is < top_p
+    keep = (cum - desc) < top_p[:, None]
+    thr = jnp.min(jnp.where(keep, desc, jnp.inf), axis=-1, keepdims=True)
+    return jnp.where(probs >= thr, logits, -jnp.inf)
+
+
+def make_sampler(vocab: int):
+    """-> sample(logits (B, V'), temperature (B,), top_k (B,) i32,
+    top_p (B,), seeds (B,) u32, positions (B,) i32)
+    -> (tokens (B,) i32, logprobs (B,) f32)
+
+    Pure function meant to be closed over by the jitted paged steps
+    (``runtime.steps.make_paged_{prefill,decode}_step(..., sampler=...)``).
+    Rows with ``temperature == 0`` lower exactly to
+    ``argmax(float32(logits[:vocab]))`` — bit parity with the greedy
+    goldens; stochastic rows apply top-k then top-p and draw one
+    Gumbel-argmax sample with key
+    ``fold_in(PRNGKey(seed), position)`` (``positions`` is the absolute
+    sequence position of the token being *produced*).  The returned
+    logprob is the chosen token's log-probability under the distribution
+    it was sampled from.
+    """
+    def sample(logits, temperature, top_k, top_p, seeds, positions):
+        lg = logits[:, :vocab].astype(jnp.float32)
+        greedy = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+        stochastic = temperature > 0.0
+
+        def greedy_only(_):
+            logp = jnp.take_along_axis(jax.nn.log_softmax(lg, axis=-1),
+                                       greedy[:, None], axis=-1)[:, 0]
+            return greedy, logp
+
+        def mixed(_):
+            # greedy rows run the stochastic math on t=1 (result discarded
+            # via the final where) — dividing by ~0 would poison softmax
+            # with NaNs
+            t = jnp.where(stochastic, temperature, 1.0).astype(jnp.float32)
+            masked = apply_top_p(apply_top_k(lg / t[:, None], top_k), top_p)
+
+            def draw(seed, pos):
+                key = jax.random.fold_in(jax.random.PRNGKey(seed), pos)
+                return jax.random.gumbel(key, (vocab,), jnp.float32)
+
+            noise = jax.vmap(draw)(seeds, positions)
+            sampled = jnp.argmax(masked + noise, axis=-1).astype(jnp.int32)
+            tok = jnp.where(stochastic, sampled, greedy)
+            dist = jnp.where(stochastic[:, None],
+                             jax.nn.log_softmax(masked, axis=-1),
+                             jax.nn.log_softmax(lg, axis=-1))
+            logp = jnp.take_along_axis(dist, tok[:, None], axis=-1)[:, 0]
+            return tok, logp
+
+        # an all-greedy batch (the default workload) must not pay the two
+        # full-vocab sorts + Gumbel draw every step just to discard them —
+        # cond executes one branch, and greedy rows take identical values
+        # through either (the mixed branch `where`s them back to argmax)
+        return jax.lax.cond(jnp.any(stochastic), mixed, greedy_only, None)
+
+    return sample

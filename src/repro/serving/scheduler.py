@@ -1,5 +1,12 @@
 """Request admission scheduler for the continuous-batching engine.
 
+The scheduler is duck-typed over a small request protocol — ``id``,
+``prompt``, ``max_new_tokens``, ``priority``, ``out_tokens`` and the
+bookkeeping slots ``_sched_seq`` / ``_charged_footprint``.  Since the v2
+API split (input-only ``Request`` vs engine-internal generation state),
+the engine queues its internal per-request records here, never the
+caller's Request objects.
+
 Policy:
   * priority classes — lower ``priority`` value is served first;
   * FCFS inside a class — ties break on arrival sequence, and a preempted
@@ -34,13 +41,19 @@ class RequestScheduler:
         self._in_flight_tokens = 0
 
     # -- queue --------------------------------------------------------------
-    def submit(self, req) -> None:
+    def check_submittable(self, req) -> None:
+        """Raise if ``req`` could NEVER be admitted (footprint over the
+        whole budget) — pure check, no state change, so the engine can vet
+        a batch before enqueueing any of it."""
         if (self.max_tokens_in_flight is not None
                 and self._footprint(req) > self.max_tokens_in_flight):
             raise ValueError(f"request {req.id} exceeds the token budget "
                              f"({self._footprint(req)} > "
                              f"{self.max_tokens_in_flight}) — it could never "
                              f"be admitted")
+
+    def submit(self, req) -> None:
+        self.check_submittable(req)
         if getattr(req, "_sched_seq", None) is None:
             req._sched_seq = next(self._seq)   # preserved across preemption
         heapq.heappush(self._heap, (req.priority, req._sched_seq, req))

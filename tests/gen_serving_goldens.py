@@ -13,6 +13,14 @@ from a post-shim checkout (it would capture the engine's own outputs and
 silently erase the baseline); the checked-in goldens_serving.json is the
 falsifiable artifact.
 
+The goldens are greedy-only and stay that way under the v2 generation API:
+the default ``SamplingParams()`` is temperature-0 argmax, so every parity
+test exercises the new submit/SamplingParams/RequestOutput surface against
+these same sequences.  Stochastic decode (temperature > 0) is deliberately
+NOT pinned here — the wave Server never sampled, so no baseline exists;
+its contract is determinism (bit-identical reruns, invariance under forced
+recompute-preemption), pinned by the sampling tests in test_serving.py.
+
 Where the no-cache forward has identical semantics (attention-only, SSM,
 hybrid, shared-block and MLA configs), the script also greedy-decodes each
 request with plain full-context ``lm_apply`` calls and asserts the wave

@@ -1,13 +1,18 @@
 """Continuous-batching serving subsystem tests: paged-cache invariants,
-scheduler admission/preemption policy, and greedy-decode parity for every
-architecture family the engine serves — attention-only, pure-SSM, hybrid,
-cross-attention, zamba2's weight-shared block, whisper's encoder-decoder
-and MLA latent attention.
+scheduler admission/preemption policy, the v2 generation API
+(SamplingParams validation, seeded stochastic decode, stop conditions,
+typed RequestOutput, generate/stream/on_token), and greedy-decode parity
+for every architecture family the engine serves — attention-only,
+pure-SSM, hybrid, cross-attention, zamba2's weight-shared block, whisper's
+encoder-decoder and MLA latent attention.
 
-Parity is asserted against tests/goldens_serving.json — token sequences
-frozen from the pre-shim wave Server (see gen_serving_goldens.py).  The
-wave Server is now a compatibility shim over the engine, so a live
-comparison would be circular; the pinned goldens keep parity falsifiable.
+Greedy parity is asserted against tests/goldens_serving.json — token
+sequences frozen from the pre-shim wave Server (see
+gen_serving_goldens.py).  The wave Server is now a compatibility shim over
+the engine, so a live comparison would be circular; the pinned goldens
+keep parity falsifiable.  Stochastic decode has no goldens: its contract
+is determinism — bit-identical reruns, seed sensitivity, and invariance
+under forced recompute-preemption — which the sampling tests pin instead.
 """
 import json
 
@@ -22,11 +27,15 @@ from repro.core.asa import AdaptiveScheduler
 from repro.launch.mesh import make_host_mesh, mesh_shape_of
 from repro.models import layers as L
 from repro.models import transformer as T
+from repro.runtime import steps as ST
 from repro.serving import (BlockAllocator, ContinuousBatchingEngine,
-                           PagedKVCache, Request, RequestScheduler,
-                           ServingMetrics, UnifiedCacheManager)
+                           PagedKVCache, Request, RequestOutput,
+                           RequestScheduler, SamplingParams, ServingMetrics,
+                           UnifiedCacheManager)
 from repro.serving.cache_manager import check_servable
+from repro.serving.engine import _ReqState
 from repro.serving.paged_cache import NULL_BLOCK, PagedCacheConfig, blocks_for
+from repro.serving.sampling import apply_top_k, apply_top_p
 from serving_fixtures import (ARCH_BY_KEY, TINY, TINY_CROSS, TINY_ENCDEC,
                               TINY_HYBRID, TINY_MLA, TINY_SHARED, TINY_SSM,
                               load_goldens, scenario_requests)
@@ -40,15 +49,15 @@ def _params_for(arch):
     return _PARAMS_CACHE[arch.name]
 
 
-def _run_scenario(name, mesh, **engine_kw):
+def _run_scenario(name, mesh, sampling=None, **engine_kw):
     arch, reqs, slots, max_len = scenario_requests(name)
     eng = ContinuousBatchingEngine(arch, _params_for(arch), mesh,
                                    slots=slots, max_len=max_len, **engine_kw)
-    for rid, prompt, max_new in reqs:
-        eng.submit(Request(id=rid, prompt=prompt.copy(),
-                           max_new_tokens=max_new))
-    eng.run_until_drained()
-    return eng, {r.id: r.out_tokens for r in eng.completed}
+    outs = eng.generate([
+        Request(id=rid, prompt=prompt.copy(), max_new_tokens=max_new,
+                sampling=sampling or SamplingParams())
+        for rid, prompt, max_new in reqs])
+    return eng, {o.request_id: o.token_ids for o in outs}
 
 
 # ---------------------------------------------------------------------------
@@ -324,8 +333,12 @@ def test_wdec_pool_carries_both_state_classes():
 # ---------------------------------------------------------------------------
 
 def _req(i, plen=8, max_new=4, priority=0):
-    return Request(id=i, prompt=np.arange(1, plen + 1, dtype=np.int32),
-                   max_new_tokens=max_new, priority=priority)
+    """Scheduler-protocol record: the scheduler queues the engine's
+    internal _ReqState (the public Request is input-only and carries no
+    out_tokens / bookkeeping fields)."""
+    r = Request(id=i, prompt=np.arange(1, plen + 1, dtype=np.int32),
+                max_new_tokens=max_new, priority=priority)
+    return _ReqState(req=r, seed=i, stop_ids=frozenset())
 
 
 def test_scheduler_fcfs_within_priority_class():
@@ -381,7 +394,8 @@ def test_scheduler_footprint_capped_at_max_len():
                        max_new_tokens=30))
     eng.run_until_drained()
     assert len(eng.completed) == 1
-    assert len(eng.completed[0].out_tokens) == 12   # truncated at max_len
+    assert len(eng.completed[0].token_ids) == 12    # truncated at max_len
+    assert eng.completed[0].finish_reason == "length"
     # the engine OWNS the cap: a scheduler reused with a second engine must
     # pick up that engine's max_len, not keep the first one's stale cap
     eng2 = ContinuousBatchingEngine(TINY, _params_for(TINY), mesh, slots=2,
@@ -531,7 +545,7 @@ def test_shared_prefix_skips_prefill_and_matches_unshared_outputs():
         for i, p in enumerate(prompts):
             eng.submit(Request(id=i, prompt=p.copy(), max_new_tokens=5))
         eng.run_until_drained()
-        return eng, {r.id: r.out_tokens for r in eng.completed}
+        return eng, {o.request_id: o.token_ids for o in eng.completed}
 
     eng_off, out_off = serve(False)
     eng_on, out_on = serve(True)
@@ -593,13 +607,14 @@ def test_prefill_serves_oldest_request_first():
     mesh = make_host_mesh()
     eng = ContinuousBatchingEngine(TINY, _params_for(TINY), mesh, slots=2,
                                    max_len=64, block_size=4, prefill_chunk=2)
-    older, newer = _req(0, plen=8), _req(1, plen=8)
+    older = Request(id=0, prompt=np.arange(1, 9, dtype=np.int32))
+    newer = Request(id=1, prompt=np.arange(1, 9, dtype=np.int32))
     eng.submit(older)
     eng.submit(newer)
     eng._admit()
     # simulate slot churn: the older request ends up in the *higher* slot
     eng.slots[0], eng.slots[1] = eng.slots[1], eng.slots[0]
-    assert eng.slots[0].req is newer and eng.slots[1].req is older
+    assert eng.slots[0].req.req is newer and eng.slots[1].req.req is older
     eng._prefill_chunk()
     assert eng.slots[1].prefill_pos == 2      # older advanced
     assert eng.slots[0].prefill_pos == 0      # newer waits
@@ -632,7 +647,7 @@ def test_cross_kv_computed_once_at_admission():
         eng.submit(Request(id=0, prompt=prompt.copy(), max_new_tokens=4,
                            frontend=frontend))
         eng.run_until_drained()
-        return eng, eng.completed[0].out_tokens
+        return eng, eng.completed[0].token_ids
 
     eng, with_fe = serve(fe)
     # slot 0's cross-K row equals the direct projection of the frontend
@@ -662,10 +677,14 @@ def test_whisper_encoder_runs_once_at_admission():
                                            (1, enc_len, 64)), np.float32)
     prompt = np.arange(1, 7, dtype=np.int32)
 
+    # a logits-returning (un-fused) prefill step: the engine's own
+    # _prefill now samples on device and returns tokens, not logits
+    raw_prefill = jax.jit(ST.make_paged_prefill_step(TINY_ENCDEC))
+
     def logits_after_admit(frontend):
         """Admit (encoder runs here, once), snapshot slot 0's cross-K row,
-        then run the jitted prefill on the post-admission pools (it donates
-        the cache, hence the snapshot first) and return its logits."""
+        then run a raw prefill step on the post-admission pools and return
+        its logits."""
         eng = ContinuousBatchingEngine(TINY_ENCDEC, params, mesh, slots=2,
                                        max_len=32, block_size=4,
                                        prefill_chunk=8)
@@ -677,7 +696,7 @@ def test_whisper_encoder_runs_once_at_admission():
         ctx = slot.req.context()
         chunk = np.concatenate([ctx, np.zeros(8 - len(ctx), np.int32)])
         table = eng.cache.table_array([slot.req.id])
-        logits, eng.cache.pools = eng._prefill(
+        logits, eng.cache.pools = raw_prefill(
             eng.params, eng.cache.pools, jnp.asarray(chunk[None, :]),
             jnp.asarray([0], jnp.int32), jnp.asarray(table),
             jnp.asarray([len(ctx)], jnp.int32),
@@ -739,10 +758,11 @@ def test_submit_rejects_zero_max_new_tokens():
     assert not eng.has_work                   # nothing was enqueued
 
 
-def test_submit_rejects_recycled_request_object():
-    """Regression: a completed Request resubmitted as-is (done=True, stale
-    out_tokens, stale _sched_seq) re-prefilled its old output as context and
-    jumped the FCFS queue with its original arrival seq."""
+def test_request_is_input_only_and_resubmittable():
+    """v2 semantics: the engine never mutates a Request (results come back
+    as RequestOutput), so a finished Request object may be resubmitted
+    verbatim — the v1 recycled-object hazard (stale out_tokens re-prefilled
+    as context, stale _sched_seq jumping the FCFS queue) cannot exist."""
     mesh = make_host_mesh()
     eng = ContinuousBatchingEngine(TINY, _params_for(TINY), mesh, slots=2,
                                    max_len=64, block_size=4, prefill_chunk=8)
@@ -750,15 +770,14 @@ def test_submit_rejects_recycled_request_object():
                   max_new_tokens=2)
     eng.submit(req)
     eng.run_until_drained()
-    assert req.done
-    with pytest.raises(ValueError, match="already been served"):
-        eng.submit(req)
-    # a half-stale object (tokens but not done) is just as corrupt
-    stale = Request(id=1, prompt=np.arange(1, 5, dtype=np.int32),
-                    max_new_tokens=2, out_tokens=[9])
-    with pytest.raises(ValueError, match="already been served"):
-        eng.submit(stale)
-    assert not eng.has_work
+    assert not hasattr(req, "out_tokens") and not hasattr(req, "done")
+    assert req.__dict__.get("_sched_seq") is None   # no bookkeeping stuck on
+    eng.submit(req)                                 # same object, second pass
+    eng.run_until_drained()
+    assert len(eng.completed) == 2
+    a, b = eng.completed
+    assert a.request_id == b.request_id == 0
+    assert a.token_ids == b.token_ids               # deterministic greedy
 
 
 # ---------------------------------------------------------------------------
@@ -779,7 +798,7 @@ def test_short_prompt_mamba2_handoff():
                                        prefill_chunk=4)
         eng.submit(Request(id=0, prompt=prompt, max_new_tokens=max_new))
         eng.run_until_drained()
-        return eng.completed[0].out_tokens
+        return eng.completed[0].token_ids
 
     first = serve(np.array([5], np.int32), 6)
     assert len(first) == 6
@@ -871,7 +890,7 @@ def test_multihost_decode_parity_and_cache_placement():
             eng.submit(Request(id=rid, prompt=prompt.copy(),
                                max_new_tokens=max_new))
         eng.run_until_drained()
-        got = {r.id: r.out_tokens for r in eng.completed}
+        got = {o.request_id: o.token_ids for o in eng.completed}
         assert got == load_goldens(scenario), scenario
     assert sharded_leaves > 0
 
@@ -890,7 +909,7 @@ def test_multihost_parity_under_preemption():
         eng.submit(Request(id=rid, prompt=prompt.copy(),
                            max_new_tokens=max_new))
     eng.run_until_drained()
-    assert {r.id: r.out_tokens for r in eng.completed} \
+    assert {o.request_id: o.token_ids for o in eng.completed} \
         == load_goldens("hybrid/preempt")
     assert eng.metrics.preemptions > 0
 
@@ -957,6 +976,7 @@ def test_metrics_json_report():
     rep = json.loads(m.to_json(engine="continuous"))
     assert rep["engine"] == "continuous"
     assert rep["completed"] == 1 and rep["total_tokens"] == 3
+    assert rep["in_flight"] == 0
     assert rep["requests"][0]["ttft_s"] == pytest.approx(0.5)
     assert rep["requests"][0]["tpot_s"] == pytest.approx(0.5)  # 1.0s / 2
     assert rep["tokens_per_sec"] == pytest.approx(2.0)         # 3 tok / 1.5s
@@ -1011,13 +1031,16 @@ def test_metrics_in_flight_requests_report_none_not_negative():
     # an id never submitted at all
     rep = m.request_report(99)
     assert rep["ttft_s"] is None and rep["tpot_s"] is None
-    # summary stays total and unpolluted by the in-flight requests
+    # summary stays total: latencies that exist are aggregated (request 1's
+    # TTFT is known even though it hasn't finished), missing ones are
+    # skipped rather than fabricated
     m.on_submit(2, now=101.0)
     m.on_first_token(2, now=101.2)
     m.on_finish(2, n_tokens=3, now=102.2)
     s = m.summary()
-    assert s["ttft_mean_s"] == pytest.approx(0.2)
+    assert s["ttft_mean_s"] == pytest.approx((0.5 + 0.2) / 2)
     assert s["tpot_mean_s"] == pytest.approx(0.5)
+    assert s["in_flight"] == 2                # requests 0 and 1 still going
 
 
 def test_metrics_block_utilization_and_prefix_hit_rate():
@@ -1077,12 +1100,485 @@ def test_metrics_summary_on_empty_and_partial_runs():
     assert s["completed"] == 0 and s["total_tokens"] == 0
     assert s["tokens_per_sec"] == 0.0 and s["ttft_max_s"] == 0.0
     assert s["queue_depth_max"] == 0 and s["requests"] == []
-    # partial: one finished, one still in flight
+    # partial: one finished, one still in flight — BOTH must appear in the
+    # report (in-flight ids used to vanish because requests iterated
+    # finish_t only), with the unfinished one counted as in_flight and its
+    # latencies None
     m.on_submit(0, now=0.0)
     m.on_submit(1, now=0.0)
     m.on_first_token(0, now=0.2)
     m.on_finish(0, n_tokens=2, now=0.5)
     s = m.summary()
-    assert s["completed"] == 1                # in-flight req 1 not counted
-    assert [r["id"] for r in s["requests"]] == [0]
+    assert s["completed"] == 1 and s["in_flight"] == 1
+    assert [r["id"] for r in s["requests"]] == [0, 1]
+    assert s["requests"][1]["ttft_s"] is None
+    assert s["requests"][1]["tpot_s"] is None
     assert s["total_tokens"] == 2
+    # means stay unpolluted by the in-flight request's None latencies
+    assert s["ttft_mean_s"] == pytest.approx(0.2)
+
+
+# ---------------------------------------------------------------------------
+# generation API v2: SamplingParams, seeded stochastic decode, stop
+# conditions, typed RequestOutput, generate/stream/on_token
+# ---------------------------------------------------------------------------
+
+def test_sampling_params_validated_at_submit():
+    """Malformed decode controls must be rejected at submit (with the
+    request id in the error), never reach a jitted step, and leave the
+    engine empty."""
+    mesh = make_host_mesh()
+    eng = ContinuousBatchingEngine(TINY, _params_for(TINY), mesh, slots=2,
+                                   max_len=64, block_size=4, prefill_chunk=8)
+    bad = [SamplingParams(temperature=-0.5),
+           SamplingParams(temperature=float("nan")),
+           SamplingParams(top_k=-1),
+           SamplingParams(top_k=TINY.vocab + 1),
+           SamplingParams(top_p=0.0),
+           SamplingParams(top_p=1.5),
+           SamplingParams(seed=-1),
+           SamplingParams(seed=2 ** 32),
+           SamplingParams(stop_token_ids=(TINY.vocab,)),
+           SamplingParams(stop_token_ids=(-3,))]
+    for sp in bad:
+        with pytest.raises(ValueError, match="request 5"):
+            eng.submit(Request(id=5, prompt=np.arange(1, 5, dtype=np.int32),
+                               sampling=sp))
+    assert not eng.has_work
+    # the same checks are usable standalone
+    with pytest.raises(ValueError, match="top_p"):
+        SamplingParams(top_p=2.0).validate()
+    SamplingParams(temperature=0.7, top_k=10, top_p=0.9, seed=3,
+                   stop_token_ids=(1, 2), logprobs=True).validate(TINY.vocab)
+
+
+def test_temperature_zero_ignores_other_knobs_and_matches_goldens():
+    """temperature=0 through explicit SamplingParams lowers to exact argmax
+    regardless of top_k/top_p/seed — bit parity with the greedy goldens,
+    including under forced preemption."""
+    mesh = make_host_mesh()
+    sp = SamplingParams(temperature=0.0, top_k=3, top_p=0.4, seed=1234)
+    for scenario, kw in [("tiny/base", dict(block_size=4, prefill_chunk=3)),
+                         ("hybrid/preempt", dict(block_size=4, num_blocks=8,
+                                                 prefill_chunk=8)),
+                         ("mla/preempt", dict(block_size=4, num_blocks=8,
+                                              prefill_chunk=8))]:
+        eng, got = _run_scenario(scenario, mesh, sampling=sp, **kw)
+        assert got == load_goldens(scenario), scenario
+        if scenario.endswith("preempt"):
+            assert eng.metrics.preemptions > 0
+
+
+def test_top_k_one_is_greedy_at_any_temperature():
+    """End-to-end mask check: top_k=1 collapses the candidate set to the
+    argmax, so even a hot temperature must reproduce the greedy goldens."""
+    mesh = make_host_mesh()
+    sp = SamplingParams(temperature=1.5, top_k=1, seed=7)
+    _, got = _run_scenario("tiny/base", mesh, sampling=sp,
+                           block_size=4, prefill_chunk=3)
+    assert got == load_goldens("tiny/base")
+
+
+def test_sampled_decode_deterministic_and_seed_sensitive():
+    """Same seed => bit-identical reruns; different seed => a different
+    stream (vocab 256, 8 tokens — collision odds are negligible); logprobs
+    are per-token, finite and <= 0."""
+    mesh = make_host_mesh()
+
+    def run(seed):
+        eng = ContinuousBatchingEngine(TINY, _params_for(TINY), mesh,
+                                       slots=2, max_len=64, block_size=4,
+                                       prefill_chunk=3)
+        sp = SamplingParams(temperature=0.9, top_k=50, top_p=0.9, seed=seed,
+                            logprobs=True)
+        return eng.generate([Request(id=0,
+                                     prompt=np.arange(1, 9, dtype=np.int32),
+                                     max_new_tokens=8, sampling=sp)])[0]
+
+    a, b, c = run(123), run(123), run(321)
+    assert a.token_ids == b.token_ids
+    assert a.logprobs == b.logprobs
+    assert a.token_ids != c.token_ids
+    assert a.finish_reason == "length" and a.n_tokens == 8
+    assert len(a.logprobs) == 8
+    assert all(np.isfinite(lp) and lp <= 0 for lp in a.logprobs)
+    # greedy requests don't carry logprobs unless asked
+    eng = ContinuousBatchingEngine(TINY, _params_for(TINY), mesh, slots=2,
+                                   max_len=64, block_size=4, prefill_chunk=3)
+    out = eng.generate([Request(id=0, prompt=np.arange(1, 9, dtype=np.int32),
+                                max_new_tokens=4)])[0]
+    assert out.logprobs is None and out.prompt_len == 8
+
+
+def test_sampled_determinism_under_forced_preemption():
+    """The acceptance property: a seeded temperature>0 run is bit-identical
+    with and without forced recompute-preemption of the sampling requests —
+    keys derive from (seed, absolute position) only, so a preempted
+    request's re-prefill regenerates exactly the tokens it lost."""
+    mesh = make_host_mesh()
+
+    def run(**kw):
+        eng = ContinuousBatchingEngine(TINY, _params_for(TINY), mesh,
+                                       slots=2, max_len=64, prefill_chunk=8,
+                                       block_size=4, **kw)
+        reqs = [Request(id=i, prompt=np.arange(1, 9, dtype=np.int32) + i,
+                        max_new_tokens=8,
+                        sampling=SamplingParams(temperature=0.8, top_p=0.95,
+                                                seed=100 + i))
+                for i in range(4)]
+        return eng, {o.request_id: o.token_ids for o in eng.generate(reqs)}
+
+    eng_ample, ample = run()
+    eng_tight, tight = run(num_blocks=8)         # forces preemption
+    assert eng_ample.metrics.preemptions == 0
+    assert eng_tight.metrics.preemptions > 0
+    assert tight == ample
+
+
+def test_sampled_preemption_rematches_prefix_cache_blocks():
+    """With share_prefix, a preempted sampling request must re-match its
+    own retired blocks at re-admission — only possible because the
+    regenerated tokens are identical, keeping the block hash chain
+    stable."""
+    mesh = make_host_mesh()
+
+    def run(**kw):
+        eng = ContinuousBatchingEngine(TINY, _params_for(TINY), mesh,
+                                       slots=2, max_len=64, prefill_chunk=8,
+                                       block_size=4, share_prefix=True, **kw)
+        reqs = [Request(id=i, prompt=np.arange(1, 9, dtype=np.int32) + i,
+                        max_new_tokens=8,
+                        sampling=SamplingParams(temperature=0.8, seed=7 + i))
+                for i in range(4)]
+        return eng, {o.request_id: o.token_ids for o in eng.generate(reqs)}
+
+    eng_tight, tight = run(num_blocks=8)
+    eng_ample, ample = run()
+    assert eng_tight.metrics.preemptions > 0
+    assert eng_tight.cache.prefix_stats()["hit_tokens"] > 0
+    assert tight == ample
+
+
+def test_sampled_neighbor_does_not_perturb_greedy_requests():
+    """Per-slot parameter isolation: a hot-temperature request sharing the
+    batch (and fighting for the same blocks) must not change its greedy
+    neighbors' tokens — their outputs are position-pure functions of their
+    own context and must still match the goldens."""
+    mesh = make_host_mesh()
+    arch, reqs, slots, max_len = scenario_requests("tiny/base")
+    eng = ContinuousBatchingEngine(arch, _params_for(arch), mesh,
+                                   slots=slots, max_len=max_len,
+                                   block_size=4, prefill_chunk=3)
+    outs = eng.generate([
+        Request(id=rid, prompt=prompt.copy(), max_new_tokens=max_new,
+                sampling=(SamplingParams(temperature=1.2, seed=5)
+                          if rid == 1 else SamplingParams()))
+        for rid, prompt, max_new in reqs])
+    want = load_goldens("tiny/base")
+    for o in outs:
+        if o.request_id == 1:
+            assert o.token_ids != want[1]        # it really sampled
+        else:
+            assert o.token_ids == want[o.request_id]
+
+
+def test_stop_token_finishes_with_reason_and_budget_release():
+    """Sampling a stop token finishes the request with
+    finish_reason="stop" (the stop token is the last entry of token_ids),
+    releases its cache blocks AND its scheduler token-budget charge — a
+    budget sized for one request must admit the next one only because the
+    stop cut the first short."""
+    mesh = make_host_mesh()
+    want = load_goldens("tiny/base")[0]          # greedy stream for prompt 0
+    stop_tok = want[2]
+    sched = RequestScheduler(max_tokens_in_flight=14)   # one 8+6 request
+    eng = ContinuousBatchingEngine(TINY, _params_for(TINY), mesh, slots=2,
+                                   max_len=64, block_size=4, prefill_chunk=3,
+                                   scheduler=sched)
+    prompt = np.arange(1, 9, dtype=np.int32)
+    outs = eng.generate([
+        Request(id=0, prompt=prompt.copy(), max_new_tokens=6,
+                sampling=SamplingParams(stop_token_ids=(stop_tok,))),
+        Request(id=1, prompt=prompt.copy(), max_new_tokens=6)])
+    assert outs[0].finish_reason == "stop"
+    assert outs[0].token_ids == want[:3]         # truncated at the stop hit
+    assert outs[1].finish_reason == "length"
+    assert outs[1].token_ids == want             # same prompt, full stream
+    assert sched._in_flight_tokens == 0          # charges fully released
+    assert eng.cache.allocator.num_used == 0
+    # a stop token the stream never samples is inert
+    eng2 = ContinuousBatchingEngine(TINY, _params_for(TINY), mesh, slots=2,
+                                    max_len=64, block_size=4, prefill_chunk=3)
+    out = eng2.generate([Request(
+        id=0, prompt=prompt.copy(), max_new_tokens=6,
+        sampling=SamplingParams(stop_token_ids=(stop_tok + 1,)))])[0]
+    assert out.finish_reason == "length" and out.token_ids == want
+
+
+def test_stop_token_on_first_token_finishes_in_prefill():
+    """A stop token sampled as the very first token finishes the request
+    straight out of prefill — it never enters decode."""
+    mesh = make_host_mesh()
+    want = load_goldens("tiny/base")[0]
+    eng = ContinuousBatchingEngine(TINY, _params_for(TINY), mesh, slots=2,
+                                   max_len=64, block_size=4, prefill_chunk=3)
+    out = eng.generate([Request(
+        id=0, prompt=np.arange(1, 9, dtype=np.int32), max_new_tokens=6,
+        sampling=SamplingParams(stop_token_ids=(want[0],)))])[0]
+    assert out.finish_reason == "stop" and out.token_ids == want[:1]
+    assert eng.metrics.decode_steps == 0
+
+
+def test_top_p_mask_keeps_mass_and_never_empties():
+    """Property test for the nucleus mask: over random logit rows and
+    top_p values, the kept set (finite entries) is never empty, its
+    probability mass is >= top_p, and it is minimal — dropping its least
+    probable member would fall below top_p."""
+    rng = np.random.default_rng(0)
+    for trial in range(25):
+        b, v = 8, 64
+        logits = jnp.asarray(rng.normal(0, 3, size=(b, v)), jnp.float32)
+        top_p = jnp.asarray(rng.uniform(0.05, 1.0, size=(b,)), jnp.float32)
+        masked = np.asarray(apply_top_p(logits, top_p))
+        probs = np.asarray(jax.nn.softmax(logits, axis=-1))
+        for i in range(b):
+            kept = np.isfinite(masked[i])
+            assert kept.any()                       # never empty
+            mass = probs[i][kept].sum()
+            assert mass >= float(top_p[i]) - 1e-6   # >= p mass kept
+            if kept.sum() > 1:                      # minimal
+                assert mass - probs[i][kept].min() < float(top_p[i]) + 1e-6
+    # top_p = 1.0 keeps the whole (finite) vocabulary
+    full = np.asarray(apply_top_p(jnp.zeros((1, 8)), jnp.ones((1,))))
+    assert np.isfinite(full).all()
+
+
+def test_top_k_mask_keeps_exactly_k():
+    rng = np.random.default_rng(1)
+    logits = jnp.asarray(rng.normal(size=(4, 32)), jnp.float32)  # no ties a.s.
+    for k, want in [(1, 1), (5, 5), (32, 32), (0, 32)]:   # 0 disables
+        masked = np.asarray(apply_top_k(logits, jnp.full((4,), k, jnp.int32)))
+        assert (np.isfinite(masked).sum(axis=-1) == want).all()
+        # the survivors are the k largest
+        for i in range(4):
+            kept = set(np.flatnonzero(np.isfinite(masked[i])))
+            top = set(np.argsort(np.asarray(logits[i]))[-(k or 32):])
+            assert kept == top
+    # top-p composes after top-k: mass is renormalized over the survivors
+    masked = apply_top_k(logits, jnp.full((4,), 4, jnp.int32))
+    both = np.asarray(apply_top_p(masked, jnp.full((4,), 0.5, jnp.float32)))
+    assert (np.isfinite(both).sum(axis=-1) <= 4).all()
+    assert (np.isfinite(both).sum(axis=-1) >= 1).all()
+
+
+def test_generate_returns_outputs_in_submission_order():
+    """generate() orders results by the request list, not by finish order
+    (the short request finishes long before the 20-token one)."""
+    mesh = make_host_mesh()
+    eng = ContinuousBatchingEngine(TINY, _params_for(TINY), mesh, slots=2,
+                                   max_len=64, block_size=4, prefill_chunk=8)
+    prompt = np.arange(1, 9, dtype=np.int32)
+    outs = eng.generate([
+        Request(id=10, prompt=prompt.copy(), max_new_tokens=20),
+        Request(id=11, prompt=prompt.copy(), max_new_tokens=2)])
+    assert [o.request_id for o in outs] == [10, 11]
+    assert [o.n_tokens for o in outs] == [20, 2]
+    # finish order on the engine's completed list was the reverse
+    assert [o.request_id for o in eng.completed] == [11, 10]
+
+
+def test_stream_and_on_token_fire_per_sampled_token():
+    """stream() yields (request_id, token) pairs in sampling order and
+    composes with a caller-installed on_token; the reassembled streams
+    equal the final RequestOutputs."""
+    mesh = make_host_mesh()
+    cb: list = []
+    eng = ContinuousBatchingEngine(TINY, _params_for(TINY), mesh, slots=2,
+                                   max_len=64, block_size=4, prefill_chunk=3,
+                                   on_token=lambda rid, tok: cb.append((rid,
+                                                                        tok)))
+    prompt = np.arange(1, 9, dtype=np.int32)
+    reqs = [Request(id=i, prompt=prompt.copy() + i, max_new_tokens=4)
+            for i in range(3)]
+    pairs = list(eng.stream(reqs))
+    assert pairs == cb                      # tap preserved the user callback
+    assert eng.on_token is not None         # and restored it afterwards
+    streams: dict = {}
+    for rid, tok in pairs:
+        streams.setdefault(rid, []).append(tok)
+    assert streams == {o.request_id: o.token_ids for o in eng.completed}
+    assert len(eng.completed) == 3
+
+
+def test_engine_clock_injection_keeps_latencies_coherent():
+    """Satellite regression: submit used to accept a synthetic `now` while
+    _prefill_chunk/_finish stamped real perf_counter() times, fabricating
+    TTFTs of ~perf_counter magnitude.  With the injected clock every
+    lifecycle stamp shares one time source."""
+    mesh = make_host_mesh()
+    t = {"now": 1000.0}
+
+    def clock():
+        t["now"] += 1.0                      # one tick per lifecycle stamp
+        return t["now"]
+
+    eng = ContinuousBatchingEngine(TINY, _params_for(TINY), mesh, slots=2,
+                                   max_len=64, block_size=4, prefill_chunk=8,
+                                   clock=clock)
+    eng.submit(Request(id=0, prompt=np.arange(1, 9, dtype=np.int32),
+                       max_new_tokens=4))    # stamped by the fake clock too
+    eng.run_until_drained()
+    out = eng.completed[0]
+    rep = eng.metrics.request_report(0)
+    # every latency is a small positive number of fake ticks — mixing in a
+    # real perf_counter() would make TTFT ~1e3 negative or ~1e5 positive
+    assert 0 < rep["ttft_s"] < 100 and 0 < rep["tpot_s"] < 100
+    assert out.ttft_s == rep["ttft_s"] and out.tpot_s == rep["tpot_s"]
+    s = eng.metrics.summary()
+    assert 0 < s["ttft_mean_s"] < 100
+    assert s["in_flight"] == 0
+
+
+def test_request_output_latency_joined_from_metrics():
+    """RequestOutput carries the same TTFT/TPOT the metrics report — one
+    join at finish time, no second bookkeeping path."""
+    mesh = make_host_mesh()
+    eng = ContinuousBatchingEngine(TINY, _params_for(TINY), mesh, slots=2,
+                                   max_len=64, block_size=4, prefill_chunk=8)
+    outs = eng.generate([Request(id=i,
+                                 prompt=np.arange(1, 9, dtype=np.int32),
+                                 max_new_tokens=3) for i in [4, 9]])
+    for o in outs:
+        rep = eng.metrics.request_report(o.request_id)
+        assert o.ttft_s == rep["ttft_s"] is not None
+        assert o.tpot_s == rep["tpot_s"] is not None
+        assert o.prompt_len == 8 and o.n_tokens == 3
+        assert isinstance(o, RequestOutput)
+
+
+def test_metrics_id_reuse_starts_a_fresh_lifecycle():
+    """Review regression: a reused request id (finished request
+    resubmitted) must not inherit the previous run's first-token stamp —
+    first-write-wins on_first_token would otherwise fabricate a NEGATIVE
+    TTFT (old first token < new submit)."""
+    m = ServingMetrics()
+    m.on_submit(0, now=0.0)
+    m.on_first_token(0, now=0.5)
+    m.on_finish(0, n_tokens=3, now=1.0)
+    m.on_submit(0, now=10.0)                  # same id, second lifecycle
+    rep = m.request_report(0)
+    assert rep["ttft_s"] is None              # stale stamps cleared
+    assert m.summary()["in_flight"] == 1
+    m.on_first_token(0, now=10.5)
+    m.on_first_token(0, now=12.0)             # preemption-resume: kept
+    m.on_finish(0, n_tokens=2, now=11.0)
+    rep = m.request_report(0)
+    assert rep["ttft_s"] == pytest.approx(0.5)
+    assert rep["n_tokens"] == 2
+
+
+def test_resubmitted_request_reports_fresh_latency():
+    """End-to-end twin of the metrics regression: the second serve of the
+    same Request object reports its own (positive) TTFT, not one computed
+    against the first run's stamps."""
+    mesh = make_host_mesh()
+    t = {"now": 0.0}
+
+    def clock():
+        t["now"] += 1.0
+        return t["now"]
+
+    eng = ContinuousBatchingEngine(TINY, _params_for(TINY), mesh, slots=2,
+                                   max_len=64, block_size=4, prefill_chunk=8,
+                                   clock=clock)
+    req = Request(id=0, prompt=np.arange(1, 9, dtype=np.int32),
+                  max_new_tokens=3)
+    eng.submit(req)
+    eng.run_until_drained()
+    eng.submit(req)
+    eng.run_until_drained()
+    first, second = eng.completed
+    assert second.token_ids == first.token_ids
+    assert second.ttft_s is not None and second.ttft_s > 0
+    assert second.tpot_s is not None and second.tpot_s > 0
+
+
+def test_stream_submits_eagerly_before_iteration():
+    """Review regression: stream() must put its requests in flight when
+    called, not at first next() — a caller who drains the engine some
+    other way would otherwise find their requests were silently never
+    submitted."""
+    mesh = make_host_mesh()
+    eng = ContinuousBatchingEngine(TINY, _params_for(TINY), mesh, slots=2,
+                                   max_len=64, block_size=4, prefill_chunk=8)
+    it = eng.stream([Request(id=i, prompt=np.arange(1, 9, dtype=np.int32),
+                             max_new_tokens=2) for i in range(2)])
+    assert eng.has_work                       # submitted without iterating
+    eng.run_until_drained()                   # drained out of band
+    assert len(eng.completed) == 2
+    assert list(it) == []                     # iterator finds nothing left
+
+
+def test_sampling_params_accept_numpy_scalars():
+    """Review regression: token ids sliced from prompt arrays are np.int32
+    (and temperatures may be np.float32) — validate must accept numpy
+    scalars, and an np.int32 stop id must actually terminate the stream."""
+    prompt = np.arange(1, 9, dtype=np.int32)
+    SamplingParams(temperature=np.float32(0.8), top_k=np.int32(5),
+                   top_p=np.float64(0.9), seed=np.int64(3),
+                   stop_token_ids=(prompt[-1],)).validate(TINY.vocab)
+    with pytest.raises(ValueError, match="outside the vocabulary"):
+        SamplingParams(stop_token_ids=(np.int32(TINY.vocab),)) \
+            .validate(TINY.vocab)
+    with pytest.raises(ValueError, match="top_p"):
+        SamplingParams(top_p="0.9").validate()   # TypeError-proof
+    mesh = make_host_mesh()
+    want = load_goldens("tiny/base")[0]
+    eng = ContinuousBatchingEngine(TINY, _params_for(TINY), mesh, slots=2,
+                                   max_len=64, block_size=4, prefill_chunk=3)
+    out = eng.generate([Request(
+        id=0, prompt=prompt.copy(), max_new_tokens=6,
+        sampling=SamplingParams(stop_token_ids=(np.int32(want[2]),)))])[0]
+    assert out.finish_reason == "stop" and out.token_ids == want[:3]
+
+
+def test_metrics_aggregates_survive_id_reuse():
+    """Review regression: resetting a reused id's lifecycle stamps must not
+    deflate engine-lifetime aggregates — completions, token totals and the
+    throughput span accumulate across lifecycles."""
+    m = ServingMetrics()
+    m.on_submit(0, now=0.0)
+    m.on_first_token(0, now=0.5)
+    m.on_finish(0, n_tokens=3, now=1.0)
+    m.on_submit(0, now=10.0)                  # reuse
+    m.on_first_token(0, now=10.5)
+    m.on_finish(0, n_tokens=2, now=11.0)
+    s = m.summary()
+    assert s["completed"] == 2                # both lifecycles counted
+    assert s["total_tokens"] == 5
+    # span covers first submit -> last finish: 5 tokens / 11s
+    assert s["tokens_per_sec"] == pytest.approx(5 / 11.0)
+    assert s["in_flight"] == 0
+
+
+def test_generate_validates_whole_batch_before_submitting():
+    """Review regression: generate() must vet every request (including
+    intra-batch duplicate ids) before putting ANY in flight — a malformed
+    entry mid-list used to leave its predecessors running with their
+    outputs unreturned."""
+    mesh = make_host_mesh()
+    eng = ContinuousBatchingEngine(TINY, _params_for(TINY), mesh, slots=2,
+                                   max_len=64, block_size=4, prefill_chunk=8)
+    ok = Request(id=0, prompt=np.arange(1, 9, dtype=np.int32),
+                 max_new_tokens=2)
+    bad = Request(id=1, prompt=np.arange(1, 9, dtype=np.int32),
+                  sampling=SamplingParams(top_p=0.0))
+    with pytest.raises(ValueError, match="request 1"):
+        eng.generate([ok, bad])
+    assert not eng.has_work                   # ok was NOT left in flight
+    dup = Request(id=0, prompt=np.arange(1, 9, dtype=np.int32),
+                  max_new_tokens=2)
+    with pytest.raises(ValueError, match="appears twice"):
+        eng.generate([ok, dup])
+    assert not eng.has_work
+    assert len(eng.generate([ok])) == 1       # engine still healthy
