@@ -10,8 +10,9 @@ whole batch to finish, which is exactly the admission latency the engine's
 what retiring the wave API is worth, not two different decode kernels.
 
 Both rows see the same requests in the same arrival order.  Results
-(throughput, TTFT, TPOT, latency, occupancy, preemptions, block
-utilization) land in BENCH_serving.json — one row per architecture,
+(throughput, TTFT/TPOT with p50/p95/p99, per-phase duration breakdown,
+latency, occupancy, preemptions, block utilization) land in
+BENCH_serving.json — one row per architecture,
 covering every serving cache class: attention-only (qwen3), pure-SSM
 slot-state (mamba2), zamba2's weight-shared paged block and whisper's
 encoder-decoder (the two archs the engine could not serve before the wave
@@ -56,6 +57,13 @@ from repro.serving import (ContinuousBatchingEngine, Request, SamplingParams,
                            ServingMetrics)
 
 ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def _ms(x) -> str:
+    """None-safe ms formatter: a row with no finished requests reports
+    latencies as None ("no data"), which must print as n/a — not crash or
+    masquerade as 0.0ms."""
+    return "n/a" if x is None else f"{x * 1e3:.1f}ms"
 
 
 def make_trace(n: int, rate_hz: float, vocab: int, seed: int = 0):
@@ -133,13 +141,7 @@ def bench_wave_shim(arch, params, mesh, trace, *, slots, max_len,
     # from the real run — they are measurements, not re-derivable
     em = srv.engine.metrics
     m = ServingMetrics()
-    m.occupancy_samples = em.occupancy_samples
-    m.queue_depth_samples = em.queue_depth_samples
-    m.block_utilization_samples = em.block_utilization_samples
-    m.preemptions = em.preemptions
-    m.engine_steps = em.engine_steps
-    m.prefill_chunks = em.prefill_chunks
-    m.decode_steps = em.decode_steps
+    m.adopt_step_stats(em)
     for r in srv.completed:
         m.on_submit(r.id, t0 + arrival[r.id])
         m.on_first_token(r.id, em.first_token_t[r.id])
@@ -210,8 +212,8 @@ def bench_arch(arch_name, args, mesh):
         row[name] = r
         print(f"[{arch.name}/{r['engine']}] {r['total_tokens']} tokens "
               f"{r['tokens_per_sec']:.1f} tok/s "
-              f"ttft {r['ttft_mean_s']*1e3:.0f}ms "
-              f"tpot {r['tpot_mean_s']*1e3:.1f}ms")
+              f"ttft {_ms(r['ttft_mean_s'])} p95 {_ms(r['ttft_p95_s'])} "
+              f"tpot {_ms(r['tpot_mean_s'])} p95 {_ms(r['tpot_p95_s'])}")
     row["speedup_tokens_per_sec"] = (
         row["continuous"]["tokens_per_sec"]
         / row["wave"]["tokens_per_sec"])
@@ -238,14 +240,18 @@ def bench_prefix_sharing(arch_name, args, mesh):
                              share_prefix=share)
         row[name] = r
         print(f"[{arch.name}/prefix/{name}] "
-              f"ttft {r['ttft_mean_s']*1e3:.0f}ms "
-              f"tpot {r['tpot_mean_s']*1e3:.1f}ms "
+              f"ttft {_ms(r['ttft_mean_s'])} "
+              f"tpot {_ms(r['tpot_mean_s'])} "
               f"hit_rate {r['prefix_hit_rate']:.2f} "
               f"util {r['block_utilization_mean']:.2f}")
-    row["ttft_speedup"] = (row["shared_off"]["ttft_mean_s"]
-                           / max(row["shared_on"]["ttft_mean_s"], 1e-12))
+    off, on = (row["shared_off"]["ttft_mean_s"],
+               row["shared_on"]["ttft_mean_s"])
+    row["ttft_speedup"] = (off / max(on, 1e-12)
+                           if off is not None and on is not None else None)
     row["hit_rate"] = row["shared_on"]["prefix_hit_rate"]
-    print(f"[{arch.name}/prefix] ttft speedup {row['ttft_speedup']:.2f}x "
+    speed = ("n/a" if row["ttft_speedup"] is None
+             else f"{row['ttft_speedup']:.2f}x")
+    print(f"[{arch.name}/prefix] ttft speedup {speed} "
           f"hit rate {row['hit_rate']:.2f}")
     return row
 
@@ -274,8 +280,8 @@ def bench_sampled_decode(arch_name, args, mesh):
         row[name] = r
         print(f"[{arch.name}/decode/{name}] {r['total_tokens']} tokens "
               f"{r['tokens_per_sec']:.1f} tok/s "
-              f"ttft {r['ttft_mean_s']*1e3:.0f}ms "
-              f"tpot {r['tpot_mean_s']*1e3:.1f}ms")
+              f"ttft {_ms(r['ttft_mean_s'])} "
+              f"tpot {_ms(r['tpot_mean_s'])}")
     row["sampled_vs_greedy_tokens_per_sec"] = (
         row["sampled"]["tokens_per_sec"] / row["greedy"]["tokens_per_sec"])
     print(f"[{arch.name}/decode] sampled/greedy throughput "

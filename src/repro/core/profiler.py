@@ -57,7 +57,16 @@ class ComponentProfiler:
 
 
 class StepMonitor:
-    """EMA step-time drift detector -> re-profile trigger."""
+    """EMA step-time drift detector -> re-profile trigger.
+
+    Train-time use: the trainer feeds step wall times and re-plans when
+    ``update`` returns True.  Serve-time use: the continuous-batching
+    engine feeds every ``step()`` duration and exports ``ema`` /
+    ``drift_fraction()`` as telemetry gauges (``step_time_ema_s`` /
+    ``step_time_drift``) plus a ``replan_triggers`` counter — the
+    re-profile signal the adaptive serving scheduler (ROADMAP item 3)
+    subscribes to.
+    """
 
     def __init__(self, alpha: float = 0.1, drift_threshold: float = 0.25,
                  min_steps: int = 20):
@@ -82,3 +91,10 @@ class StepMonitor:
             self.baseline = self.ema      # re-arm after trigger
             return True
         return False
+
+    def drift_fraction(self) -> Optional[float]:
+        """Current |ema - baseline| / baseline, or None before the
+        baseline exists — the live drift gauge telemetry exports."""
+        if self.baseline is None or self.ema is None:
+            return None
+        return abs(self.ema - self.baseline) / self.baseline

@@ -34,6 +34,22 @@
                      --shared-prefix-len tokens, later requests reuse its
                      cached blocks and start prefill at the matched boundary;
                      the report line gains the prefix-cache hit rate.
+
+Observability (continuous engine only):
+--trace-out PATH     record a Chrome trace-event JSON of the whole run —
+                     one track per engine phase (admission / prefix-match /
+                     prefill / decode / sample host-sync) plus a lifecycle
+                     span per request with preemption/resume annotations.
+                     Open it in Perfetto (ui.perfetto.dev) or
+                     chrome://tracing.
+--prom-out PATH      write the final metrics registry as Prometheus text
+                     exposition.
+--metrics-every S    with --metrics-out: append a windowed-signal JSONL
+                     snapshot to <metrics-out>.jsonl every S seconds of
+                     engine time (atomic rewrite per snapshot).
+--metrics-window S   sliding-window length for the workload signal vector
+                     (arrival rate / prompt mix / prefix hit rate / block
+                     pressure; default 10s).
 """
 from __future__ import annotations
 
@@ -87,7 +103,23 @@ def main():
                          "prompt-len, i.e. suffixes of 4 unique tokens)")
     ap.add_argument("--metrics-out", default=None,
                     help="write the continuous engine's JSON metrics here")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome trace-event JSON (Perfetto) of the "
+                         "run: per-phase tracks + per-request spans")
+    ap.add_argument("--prom-out", default=None,
+                    help="write the final metrics as Prometheus text "
+                         "exposition")
+    ap.add_argument("--metrics-every", type=float, default=None,
+                    help="with --metrics-out: append a windowed-signal JSONL "
+                         "snapshot to <metrics-out>.jsonl every S seconds of "
+                         "engine time")
+    ap.add_argument("--metrics-window", type=float, default=10.0,
+                    help="sliding-window seconds for the workload signal "
+                         "vector (default 10)")
     args = ap.parse_args()
+    if args.metrics_every is not None and not args.metrics_out:
+        ap.error("--metrics-every needs --metrics-out (snapshots go to "
+                 "<metrics-out>.jsonl)")
 
     arch = get_arch(args.arch)
     if args.smoke:
@@ -112,6 +144,10 @@ def main():
             ap.error("--engine wave is greedy-only (the legacy API has no "
                      "sampling field): drop the sampling flags or use "
                      "--engine continuous")
+        if args.trace_out or args.prom_out or args.metrics_every is not None:
+            ap.error("--trace-out/--prom-out/--metrics-every need the "
+                     "continuous engine (the wave shim exposes no "
+                     "telemetry): use --engine continuous")
         from repro.runtime.server import Request, Server
         server = Server(arch, params, mesh, slots=args.slots,
                         max_len=args.max_len,
@@ -129,14 +165,22 @@ def main():
               f"(continuous engine under the hood)")
         return
 
-    from repro.serving import (ContinuousBatchingEngine, Request,
-                               SamplingParams)
+    from repro.serving import (ChromeTracer, ContinuousBatchingEngine,
+                               Request, SamplingParams, ServingMetrics,
+                               SnapshotWriter, prometheus_text)
+    from repro.serving.export import atomic_write_text
     stop_ids = (tuple(int(s) for s in args.stop.split(","))
                 if args.stop else ())
+    tracer = ChromeTracer() if args.trace_out else None
+    snapshot = (SnapshotWriter(args.metrics_out + ".jsonl",
+                               every_s=args.metrics_every)
+                if args.metrics_every is not None else None)
     engine = ContinuousBatchingEngine(
         arch, params, mesh, slots=args.slots, max_len=args.max_len,
         block_size=args.block_size, num_blocks=args.num_blocks,
-        prefill_chunk=args.prefill_chunk, share_prefix=args.share_prefix)
+        prefill_chunk=args.prefill_chunk, share_prefix=args.share_prefix,
+        metrics=ServingMetrics(window_s=args.metrics_window),
+        tracer=tracer, snapshot=snapshot)
     outs = engine.generate([
         Request(id=i, prompt=p, max_new_tokens=args.max_new,
                 sampling=SamplingParams(temperature=args.temperature,
@@ -152,11 +196,17 @@ def main():
     mode = ("greedy" if args.temperature == 0 else
             f"T={args.temperature} top_k={args.top_k} top_p={args.top_p} "
             f"seed={args.seed}")
+
+    def ms(x):                       # None-safe: "no data" is not 0.0ms
+        return "n/a" if x is None else f"{x * 1e3:.1f}ms"
+
     print(f"[continuous/{mode}] {s['completed']} requests, "
           f"{s['total_tokens']} tokens, "
           f"{s['decode_steps']} decode steps / {s['prefill_chunks']} prefill "
-          f"chunks, ttft mean {s['ttft_mean_s']*1e3:.1f}ms, occupancy "
-          f"{s['slot_occupancy_mean']*100:.0f}%, block util "
+          f"chunks, ttft mean {ms(s['ttft_mean_s'])} "
+          f"p50 {ms(s['ttft_p50_s'])} p95 {ms(s['ttft_p95_s'])} "
+          f"p99 {ms(s['ttft_p99_s'])}, tpot p50 {ms(s['tpot_p50_s'])}, "
+          f"occupancy {s['slot_occupancy_mean']*100:.0f}%, block util "
           f"{s['block_utilization_mean']:.2f}, "
           f"{s['preemptions']} preemptions, finish reasons "
           f"{dict(reasons)}{share}")
@@ -169,6 +219,15 @@ def main():
         engine.metrics.write(args.metrics_out, engine="continuous",
                              arch=arch.name)
         print(f"metrics -> {args.metrics_out}")
+    if snapshot is not None:
+        snapshot.write(engine.metrics)      # final flush past the cadence
+        print(f"snapshots -> {snapshot.path} ({snapshot.n_snapshots} lines)")
+    if tracer is not None:
+        tracer.write(args.trace_out)
+        print(f"trace -> {args.trace_out} (open in ui.perfetto.dev)")
+    if args.prom_out:
+        atomic_write_text(args.prom_out, prometheus_text(engine.metrics))
+        print(f"prometheus -> {args.prom_out}")
 
 
 if __name__ == "__main__":

@@ -49,9 +49,24 @@ Layers (bottom up):
                     position) so recompute-preemption regenerates
                     identical tokens (which keeps prefix-cache hash
                     chains re-matchable).
-  metrics.py        per-request TTFT/TPOT + queue depth / slot occupancy /
-                    tokens-per-second counters, emitted as JSON; one
-                    injectable engine clock stamps every lifecycle point.
+  telemetry.py      metric primitives: counters, gauges, log-bucketed
+                    histograms (O(1) record, fixed memory, exact p50/p95/
+                    p99 within the bucket growth factor) and sliding
+                    windows over caller-supplied engine-clock timestamps.
+  tracing.py        ChromeTracer: span-based tracing to Chrome trace-event
+                    JSON (load in Perfetto / chrome://tracing) — one track
+                    per engine phase plus async per-request lifecycle
+                    spans; zero cost when the engine runs without one.
+  export.py         exporters: Prometheus text exposition of the whole
+                    registry, atomic file writes, and the periodic JSONL
+                    snapshot writer that streams the windowed signal
+                    vector.
+  metrics.py        ServingMetrics — the facade over telemetry.py:
+                    per-request TTFT/TPOT percentiles, per-phase duration
+                    histograms, windowed workload signals
+                    (``window_signals()`` — the adaptive scheduler's
+                    input), emitted as JSON; one injectable engine clock
+                    stamps every lifecycle point.
   engine.py         the continuous-batching engine: per-slot decode
                     positions, admission into freed slots every step,
                     chunked prefill interleaved with decode; serves every
@@ -72,12 +87,20 @@ from repro.serving.cache_manager import (PAGEABLE_KINDS, SLOT_STATE_KINDS,
                                          UnifiedCacheManager)
 from repro.serving.engine import (ContinuousBatchingEngine, Request,
                                   RequestOutput)
+from repro.serving.export import (SnapshotWriter, atomic_write_text,
+                                  prometheus_text)
 from repro.serving.metrics import ServingMetrics
 from repro.serving.paged_cache import BlockAllocator, PagedKVCache
 from repro.serving.sampling import GREEDY, SamplingParams
 from repro.serving.scheduler import RequestScheduler
+from repro.serving.telemetry import (Counter, Gauge, LogHistogram,
+                                     SlidingWindow, Telemetry)
+from repro.serving.tracing import ChromeTracer, validate_chrome_trace
 
 __all__ = ["ContinuousBatchingEngine", "Request", "RequestOutput",
            "SamplingParams", "GREEDY", "ServingMetrics", "BlockAllocator",
            "PagedKVCache", "UnifiedCacheManager", "RequestScheduler",
-           "PAGEABLE_KINDS", "SLOT_STATE_KINDS"]
+           "PAGEABLE_KINDS", "SLOT_STATE_KINDS",
+           "Counter", "Gauge", "LogHistogram", "SlidingWindow", "Telemetry",
+           "ChromeTracer", "validate_chrome_trace",
+           "SnapshotWriter", "atomic_write_text", "prometheus_text"]

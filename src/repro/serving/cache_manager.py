@@ -133,3 +133,11 @@ class UnifiedCacheManager(PagedKVCache):
         for active batch rows, the null slot row for None (inactive)."""
         return np.asarray([self.null_slot if r is None else r
                            for r in rows], np.int32)
+
+    def stats(self) -> dict:
+        """Paged-layer stats plus the slot-state dimension of the unified
+        cache (which state classes this arch carries, and how many rows)."""
+        out = super().stats()
+        out["slot_state_kinds"] = list(self.slot_state_kinds)
+        out["slot_rows"] = self.cfg.slots if self.has_slot_state else 0
+        return out

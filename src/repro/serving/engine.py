@@ -69,6 +69,17 @@ one injectable ``clock`` — tests pass a synthetic clock and get coherent
 TTFT/TPOT instead of mixing fake submit times with real perf_counter
 stamps.
 
+Observability: every step is phase-timed (admission / prefix-match /
+prefill chunk / decode / sample host-sync) into the ServingMetrics
+log-bucketed histograms, a ``StepMonitor`` (core/profiler.py) tracks
+step-time EMA drift as the adaptive scheduler's re-profile trigger, and
+an optional ``tracer`` (serving/tracing.py ChromeTracer) records the same
+clock values as Perfetto-loadable spans — per-phase tracks plus a
+lifecycle span per request with admitted/first-token/preempt/resume
+annotations.  With ``tracer=None`` (default) no trace work happens at
+all; an optional ``snapshot`` (serving/export.py SnapshotWriter) appends
+a windowed-signal JSONL line every N seconds of engine time.
+
 Greedy decode is token-for-token identical to the retired wave Server: the
 paged attention paths mask exactly the same prefix (layers._paged_sdpa,
 mla.mla_paged_attention), the slot-state path runs the same recurrence on
@@ -91,6 +102,7 @@ from jax.sharding import NamedSharding
 
 from repro.configs.base import ArchConfig, ShapeSpec
 from repro.core.asa import AdaptiveScheduler
+from repro.core.profiler import StepMonitor
 from repro.launch.mesh import mesh_shape_of
 from repro.runtime import steps as ST
 from repro.serving.cache_manager import UnifiedCacheManager, check_servable
@@ -216,7 +228,9 @@ class ContinuousBatchingEngine:
                  asa: Optional[AdaptiveScheduler] = None,
                  metrics: Optional[ServingMetrics] = None,
                  clock: Callable[[], float] = time.perf_counter,
-                 on_token: Optional[Callable[[int, int], None]] = None):
+                 on_token: Optional[Callable[[int, int], None]] = None,
+                 tracer=None, snapshot=None,
+                 step_monitor: Optional[StepMonitor] = None):
         check_servable(arch)           # precise error for excluded archs
         self.arch, self.mesh = arch, mesh
         self.max_len, self.prefill_chunk = max_len, prefill_chunk
@@ -258,6 +272,16 @@ class ContinuousBatchingEngine:
         # different max_len would mis-charge the budget
         self.scheduler.footprint_cap = self.max_len
         self.metrics = metrics or ServingMetrics()
+        # observability: ChromeTracer (serving/tracing.py) and
+        # SnapshotWriter (serving/export.py) are optional and cost nothing
+        # when absent; the StepMonitor always runs (a handful of floats)
+        self.tracer = tracer
+        self.snapshot = snapshot
+        self.step_monitor = step_monitor or StepMonitor()
+        # live references: summary()/exporters read the scheduler counters
+        # and cache geometry at call time instead of per-step pushes
+        self.metrics.scheduler_stats = self.scheduler.stats
+        self.metrics.cache_stats = self.cache.stats
         self.slots = [_Slot(idx=i) for i in range(slots)]
         self.completed: list[RequestOutput] = []
         self._states: dict[int, _ReqState] = {}   # queued or running
@@ -303,7 +327,12 @@ class ContinuousBatchingEngine:
             logprobs=[] if sp.logprobs else None)
         self.scheduler.submit(st)        # may raise (token budget) — only a
         self._states[req.id] = st        # queued request claims its id
-        self.metrics.on_submit(req.id, self._clock() if now is None else now)
+        t = self._clock() if now is None else now
+        self.metrics.on_submit(req.id, t, prompt_len=len(req.prompt))
+        if self.tracer is not None:
+            self.tracer.request_begin(req.id, t, prompt_len=len(req.prompt),
+                                      max_new_tokens=req.max_new_tokens,
+                                      priority=req.priority)
 
     def _target_total(self, req) -> int:
         # same self-truncation as the wave Server's max_len loop bound
@@ -350,7 +379,11 @@ class ContinuousBatchingEngine:
         st = slot.req
         self.cache.release(st.id)
         self.scheduler.on_finish(st)
-        self.metrics.on_finish(st.id, len(st.out_tokens), self._clock())
+        t = self._clock()
+        self.metrics.on_finish(st.id, len(st.out_tokens), t, reason=reason)
+        if self.tracer is not None:
+            self.tracer.request_end(st.id, t, finish_reason=reason,
+                                    n_tokens=len(st.out_tokens))
         del self._states[st.id]
         rep = self.metrics.request_report(st.id)
         self.completed.append(RequestOutput(
@@ -365,10 +398,15 @@ class ContinuousBatchingEngine:
         self.cache.release(st.id)
         self.scheduler.preempt(st)
         self.metrics.on_preempt(st.id)
+        if self.tracer is not None:
+            self.tracer.request_instant(st.id, "preempt", self._clock(),
+                                        resident_tokens=slot.pos,
+                                        n_generated=len(st.out_tokens))
         slot.req, slot.state, slot.pos, slot.prefill_pos = None, "idle", 0, 0
 
     # -- phase 1: admission --------------------------------------------
-    def _admit(self) -> None:
+    def _admit(self) -> int:
+        admitted = 0
         for slot in self.slots:
             if slot.busy:
                 continue
@@ -387,13 +425,34 @@ class ContinuousBatchingEngine:
             # longest cached full-block prefix: refcounts bump, the table
             # starts populated, and prefill starts at the matched boundary
             # (no-op with share_prefix off)
-            n_cached = self.cache.assign_prefix(st.id, ctx)
+            if self.share_prefix:
+                tp0 = self._clock()
+                n_cached = self.cache.assign_prefix(st.id, ctx)
+                tp1 = self._clock()
+                self.metrics.on_phase("prefix_match", tp1 - tp0)
+                if self.tracer is not None:
+                    self.tracer.phase("prefix_match", tp0, tp1,
+                                      request=st.id,
+                                      matched_tokens=n_cached)
+            else:
+                n_cached = self.cache.assign_prefix(st.id, ctx)
             ok = self.cache.reserve(st.id, len(ctx))
             assert ok, "can_fit_request passed but reserve failed"
             slot.req, slot.state = st, "prefill"
             slot.pos, slot.prefill_pos = n_cached, n_cached
+            admitted += 1
             if self.share_prefix:
-                self.metrics.on_prefix_match(n_cached, len(ctx))
+                self.metrics.on_prefix_match(n_cached, len(ctx),
+                                             now=self._clock())
+            if self.tracer is not None:
+                t = self._clock()
+                if st.out_tokens:      # re-admission after preemption
+                    self.tracer.request_instant(st.id, "resume", t,
+                                                n_generated=len(st.out_tokens))
+                self.tracer.request_instant(st.id, "admitted", t,
+                                            slot=slot.idx,
+                                            context_len=len(ctx),
+                                            prefix_cached_tokens=n_cached)
             if self._admit_slot_state is not None:
                 # reset this slot's state-pool rows (zero mamba2 state;
                 # cross K/V from the request's frontend, computed once)
@@ -402,15 +461,16 @@ class ContinuousBatchingEngine:
                 if st.req.frontend is not None:
                     args += (jnp.asarray(st.req.frontend),)
                 self.cache.pools = self._admit_slot_state(*args)
+        return admitted
 
     # -- phase 2: one chunk of prefill ---------------------------------
-    def _prefill_chunk(self) -> None:
+    def _prefill_chunk(self) -> bool:
         # oldest request first (scheduler seq), not lowest slot index — a
         # newer request admitted into a freed lower slot must not starve an
         # older mid-prefill request's TTFT
         prefilling = [s for s in self.slots if s.state == "prefill"]
         if not prefilling:
-            return
+            return False
         slot = min(prefilling, key=lambda s: s.req._sched_seq)
         st = slot.req
         ctx = st.context()
@@ -433,18 +493,22 @@ class ContinuousBatchingEngine:
         if slot.prefill_pos == len(ctx):
             # the fused sampler produced this chunk's next token at absolute
             # position len(ctx) — only the final chunk's draw is real
-            self.metrics.on_first_token(st.id, self._clock())
+            t = self._clock()
+            self.metrics.on_first_token(st.id, t)
+            if self.tracer is not None:
+                self.tracer.request_instant(st.id, "first_token", t)
             reason = self._record_token(slot, int(tok[0]), float(logp[0]))
             if reason is not None:
                 self._finish(slot, reason)
             else:
                 slot.state = "decode"
+        return True
 
     # -- phase 3: one decode step for every decoding slot --------------
-    def _decode_step(self) -> None:
+    def _decode_step(self) -> int:
         decoding = [s for s in self.slots if s.state == "decode"]
         if not decoding:
-            return
+            return 0
         # grow block tables; preempt the longest-running request on pressure
         for slot in list(decoding):
             if slot.req is None:       # already preempted as an earlier victim
@@ -460,7 +524,7 @@ class ContinuousBatchingEngine:
                     break
         decoding = [s for s in decoding if s.req is not None]
         if not decoding:
-            return
+            return 0
         B = len(self.slots)
         last = np.zeros((B, 1), np.int32)
         pos = np.zeros((B,), np.int32)
@@ -481,8 +545,19 @@ class ContinuousBatchingEngine:
             jnp.asarray(pos), jnp.asarray(table), jnp.asarray(sids),
             *self._sampling_rows(
                 [s.req if s.state == "decode" else None for s in self.slots]))
+        # the (B,) token/logprob transfer is where the host blocks on the
+        # device — timed as its own phase so the per-step breakdown
+        # separates "waiting for the step" from host-side bookkeeping
+        ts0 = self._clock()
         nxt = np.asarray(tok)
         lps = np.asarray(logp)
+        ts1 = self._clock()
+        self.metrics.on_phase("sample_sync", ts1 - ts0)
+        if self.tracer is not None:
+            n_sampled = sum(1 for s in decoding
+                            if not s.req.sampling.is_greedy)
+            self.tracer.phase("sample_sync", ts0, ts1,
+                              n_rows=len(decoding), n_sampled=n_sampled)
         self.metrics.decode_steps += 1
         for i, s in enumerate(self.slots):
             if s.state != "decode":
@@ -500,15 +575,46 @@ class ContinuousBatchingEngine:
                 self.cache.commit_prefix(s.req.id, s.req.context(), s.pos)
             if reason is not None:
                 self._finish(s, reason)
+        return len(decoding)
 
     # ------------------------------------------------------------------
     def step(self) -> None:
-        self._admit()
-        self._prefill_chunk()
-        self._decode_step()
+        tr = self.tracer
+        t0 = self._clock()
+        admitted = self._admit()
+        t1 = self._clock()
+        prefilled = self._prefill_chunk()
+        t2 = self._clock()
+        decoded = self._decode_step()
+        t3 = self._clock()
+        # phase durations only when the phase did work — zero-work dispatch
+        # overhead must not dilute the distributions
+        if admitted:
+            self.metrics.on_phase("admission", t1 - t0)
+            if tr is not None:
+                tr.phase("admission", t0, t1, admitted=admitted)
+        if prefilled:
+            self.metrics.on_phase("prefill", t2 - t1)
+            if tr is not None:
+                tr.phase("prefill", t1, t2)
+        if decoded:
+            self.metrics.on_phase("decode", t3 - t2)
+            if tr is not None:
+                tr.phase("decode", t2, t3, n_rows=decoded)
+        util = self.cache.utilization
+        if tr is not None:
+            tr.counter("queue_depth", t3, self.scheduler.queue_depth)
+            tr.counter("block_utilization", t3, util)
         self.metrics.on_step(self.scheduler.queue_depth,
                              sum(s.busy for s in self.slots), len(self.slots),
-                             block_utilization=self.cache.utilization)
+                             block_utilization=util, now=t3)
+        dur = t3 - t0
+        triggered = self.step_monitor.update(dur)
+        self.metrics.on_step_time(dur, ema=self.step_monitor.ema,
+                                  drift=self.step_monitor.drift_fraction(),
+                                  triggered=triggered)
+        if self.snapshot is not None:
+            self.snapshot.maybe_write(self.metrics, t3)
 
     @property
     def has_work(self) -> bool:

@@ -326,6 +326,26 @@ class PagedKVCache:
         return need <= self.allocator.num_free + evictable
 
     @property
+    def pool_bytes(self) -> int:
+        """Device memory resident in the cache pools (all leaves of the
+        pytree, block pools and slot-state rows alike) — a telemetry
+        gauge, set once at engine construction."""
+        return sum(leaf.size * leaf.dtype.itemsize
+                   for leaf in jax.tree.leaves(self.pools))
+
+    def stats(self) -> dict:
+        """JSON-able cache-layer stats for the telemetry exporters:
+        allocator occupancy, geometry, and the prefix-index counters."""
+        return {"num_blocks": self.cfg.num_blocks,
+                "block_size": self.cfg.block_size,
+                "num_free": self.allocator.num_free,
+                "num_used": self.allocator.num_used,
+                "utilization": self.utilization,
+                "pool_bytes": self.pool_bytes,
+                "prefix": self.prefix_stats() if self.cfg.share_prefix
+                else None}
+
+    @property
     def utilization(self) -> float:
         """Live cache pressure: blocks held by running requests / usable.
         Unreferenced LRU-retired prefix-cache blocks are excluded — they

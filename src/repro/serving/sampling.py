@@ -85,6 +85,14 @@ class SamplingParams:
     stop_token_ids: tuple = ()
     logprobs: bool = False
 
+    @property
+    def is_greedy(self) -> bool:
+        """True when this request lowers to exact argmax (temperature 0).
+        Telemetry uses it to annotate decode steps with their batch
+        composition (greedy vs stochastic rows) — the all-greedy case is
+        the fast path that skips the vocab sorts and Gumbel draw."""
+        return self.temperature == 0
+
     def validate(self, vocab: Optional[int] = None) -> None:
         """Raise ValueError on any parameter a jitted step can't honor.
         numbers.Integral/Real so numpy scalars (np.int32 stop ids sliced

@@ -23,6 +23,15 @@ Policy:
     most blocks per preemption.  Footprint, not generated-token count: a
     long-prompt request mid-prefill has zero output tokens but may hold
     more blocks than any decoding request.
+
+Telemetry: ``stats`` is a live dict of scheduler-level counters
+(submitted / admitted / budget_refusals / preemptions / released).  The
+engine hands the dict to ``ServingMetrics`` once at construction, so the
+summary's ``scheduler`` section and the Prometheus/JSONL exporters stay
+current without a per-step push.  ``budget_refusals`` in particular is an
+adaptive-scheduler input: it counts admission attempts blocked by the
+token budget while work was queued — the signal that the budget, not the
+cache, is the bottleneck.
 """
 from __future__ import annotations
 
@@ -39,6 +48,10 @@ class RequestScheduler:
         self._heap: list = []                  # (priority, seq, Request)
         self._seq = itertools.count()
         self._in_flight_tokens = 0
+        # live telemetry counters (ServingMetrics holds a reference)
+        self.stats: dict[str, int] = {"submitted": 0, "admitted": 0,
+                                      "budget_refusals": 0,
+                                      "preemptions": 0, "released": 0}
 
     # -- queue --------------------------------------------------------------
     def check_submittable(self, req) -> None:
@@ -57,6 +70,7 @@ class RequestScheduler:
         if getattr(req, "_sched_seq", None) is None:
             req._sched_seq = next(self._seq)   # preserved across preemption
         heapq.heappush(self._heap, (req.priority, req._sched_seq, req))
+        self.stats["submitted"] += 1
 
     @property
     def queue_depth(self) -> int:
@@ -85,6 +99,9 @@ class RequestScheduler:
         if (self.max_tokens_in_flight is not None
                 and self._in_flight_tokens + self._footprint(req)
                 > self.max_tokens_in_flight):
+            # queued work refused on budget, not cache: the signal that the
+            # token budget is the bottleneck (telemetry, ROADMAP item 3)
+            self.stats["budget_refusals"] += 1
             return None
         heapq.heappop(self._heap)
         # remember the exact charge: if footprint_cap changes while this
@@ -92,6 +109,7 @@ class RequestScheduler:
         # a re-computed footprint would leak budget forever
         req._charged_footprint = self._footprint(req)
         self._in_flight_tokens += req._charged_footprint
+        self.stats["admitted"] += 1
         return req
 
     def on_finish(self, req) -> None:
@@ -99,6 +117,7 @@ class RequestScheduler:
         self._in_flight_tokens -= (self._footprint(req) if charged is None
                                    else charged)
         req._charged_footprint = None
+        self.stats["released"] += 1
 
     # -- preemption ---------------------------------------------------------
     def pick_preemption_victim(self, running: list):
@@ -120,3 +139,4 @@ class RequestScheduler:
         generated tokens stay on the request and are re-prefilled)."""
         self.on_finish(req)
         self.submit(req)
+        self.stats["preemptions"] += 1
