@@ -157,13 +157,20 @@ def bench_wave_shim(arch, params, mesh, trace, *, slots, max_len,
 
 def bench_continuous(arch, params, mesh, trace, *, slots, max_len,
                      block_size, prefill_chunk, share_prefix=False,
-                     sampling_for=None):
+                     sampling_for=None, sanitize=False):
     """``sampling_for(request_id) -> SamplingParams`` attaches per-request
-    decode controls (None = greedy default)."""
+    decode controls (None = greedy default).  ``sanitize`` attaches the
+    paged-cache sanitizer (analysis/sanitizer.py) — rows then measure the
+    checked engine, so it stays off for the recorded numbers."""
+    sanitizer = None
+    if sanitize:
+        from repro.analysis.sanitizer import CacheSanitizer
+        sanitizer = CacheSanitizer()
     eng = ContinuousBatchingEngine(arch, params, mesh, slots=slots,
                                    max_len=max_len, block_size=block_size,
                                    prefill_chunk=prefill_chunk,
-                                   share_prefix=share_prefix)
+                                   share_prefix=share_prefix,
+                                   sanitizer=sanitizer)
     # warm up the jitted steps so rows measure serving, not compilation
     eng.submit(Request(id=len(trace), prompt=np.ones(8, np.int32),
                        max_new_tokens=2))
@@ -188,9 +195,15 @@ def bench_continuous(arch, params, mesh, trace, *, slots, max_len,
         elif pending:
             time.sleep(min(pending[0][1][0] - now, 0.01))
     wall = time.perf_counter() - t0
+    if sanitizer is not None:
+        # the bench drives step() directly, so run the drain-time leak
+        # check run_until_drained would have run
+        sanitizer.check_drained(eng)
     out = eng.metrics.summary()
     out.update(engine="continuous", wall_s=wall,
                tokens_per_sec=out["total_tokens"] / wall)
+    if sanitizer is not None:
+        out["sanitizer"] = sanitizer.report()
     return out
 
 
@@ -205,7 +218,8 @@ def bench_arch(arch_name, args, mesh):
                  "prefill_chunk": args.prefill_chunk}
     for name, fn, kw in [
         ("wave", bench_wave_shim, engine_kw),
-        ("continuous", bench_continuous, engine_kw),
+        ("continuous", bench_continuous,
+         dict(engine_kw, sanitize=args.sanitize)),
     ]:
         r = fn(arch, params, mesh, trace, slots=args.slots,
                max_len=args.max_len, **kw)
@@ -237,7 +251,7 @@ def bench_prefix_sharing(arch_name, args, mesh):
                              max_len=args.max_len,
                              block_size=args.block_size,
                              prefill_chunk=args.prefill_chunk,
-                             share_prefix=share)
+                             share_prefix=share, sanitize=args.sanitize)
         row[name] = r
         print(f"[{arch.name}/prefix/{name}] "
               f"ttft {_ms(r['ttft_mean_s'])} "
@@ -276,7 +290,7 @@ def bench_sampled_decode(arch_name, args, mesh):
                              max_len=args.max_len,
                              block_size=args.block_size,
                              prefill_chunk=args.prefill_chunk,
-                             sampling_for=fn)
+                             sampling_for=fn, sanitize=args.sanitize)
         row[name] = r
         print(f"[{arch.name}/decode/{name}] {r['total_tokens']} tokens "
               f"{r['tokens_per_sec']:.1f} tok/s "
@@ -311,6 +325,11 @@ def main():
                     help="shared system-prompt length for the prefix-"
                          "sharing trace (full blocks of it are reused)")
     ap.add_argument("--out", default=str(ROOT / "BENCH_serving.json"))
+    ap.add_argument("--sanitize", action="store_true",
+                    help="attach the paged-cache sanitizer to every "
+                         "continuous-engine row (invariants checked each "
+                         "step; rows then measure the checked engine — "
+                         "keep it off for recorded numbers)")
     args = ap.parse_args()
 
     mesh = make_host_mesh()

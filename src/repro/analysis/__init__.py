@@ -1,0 +1,35 @@
+"""Mechanical enforcement of the serving stack's invariants.
+
+Two complementary halves:
+
+  * ``repro.analysis.lint`` — reprolint, an AST static-analysis pass
+    (``python -m repro.analysis.lint src/repro``) whose rules check jit
+    hygiene, PRNG discipline, alloc/free pairing, atomic writes and
+    clock injection from program structure.  Stdlib-only.
+  * ``repro.analysis.sanitizer`` — a runtime paged-cache sanitizer that
+    records allocation sites and cross-validates refcounts against live
+    block tables and the prefix index every engine step.
+
+The sanitizer half touches the jax-backed cache, so it is exported
+lazily: importing ``repro.analysis`` (as the CI lint job does, with no
+jax installed) must never pull in jax.
+"""
+import importlib
+
+__all__ = ["Finding", "Linter", "ModuleInfo",
+           "CacheSanitizer", "SanitizerError"]
+
+# everything is lazy: the sanitizer half must not import jax when only
+# the linter is wanted, and eagerly importing lint here would trip
+# runpy's double-import warning for `python -m repro.analysis.lint`
+_EXPORTS = {"Finding": "lint", "Linter": "lint", "ModuleInfo": "lint",
+            "CacheSanitizer": "sanitizer", "SanitizerError": "sanitizer"}
+
+
+def __getattr__(name):
+    submodule = _EXPORTS.get(name)
+    if submodule is None:
+        raise AttributeError(f"module {__name__!r} has no attribute "
+                             f"{name!r}")
+    return getattr(
+        importlib.import_module(f"repro.analysis.{submodule}"), name)

@@ -1,0 +1,804 @@
+"""reprolint rules: one class per enforced serving-stack invariant.
+
+Every rule exists because a real bug class shipped (or nearly shipped) in
+PRs 1-6 and is now pinned only by after-the-fact regression tests; the
+rules check the *structure* that makes the bug impossible.  The catalogue
+(details and motivating bugs in docs/INVARIANTS.md):
+
+  jit-host-sync        no ``print`` / ``.item()`` / ``np.asarray`` /
+                       ``jax.device_get`` inside the jitted step builders
+                       or anything they (transitively) call — a host sync
+                       in the fused step serializes every engine step.
+  jit-recompile-hazard no Python ``if``/``while`` on a *traced value*
+                       inside a jitted scope — it either recompiles per
+                       value or raises ConcretizationTypeError.  Branching
+                       on ``.shape``/``.ndim``/``len()`` is static and
+                       allowed.
+  prng-discipline      serving code must derive sampling keys as
+                       ``fold_in(key, absolute_position)`` and never
+                       ``split`` — key streams must be pure functions of
+                       (seed, position) or recompute-preemption replays a
+                       different token stream (the PR 5 determinism
+                       invariant).
+  refcount-pairing     a local holding ``BlockAllocator.alloc()`` blocks
+                       must, on every exit path (including exception
+                       edges), either transfer ownership (stored /
+                       returned / passed on) or free them — a bare exit
+                       leaks physical blocks until engine restart.
+  atomic-write         file writes under serving/ go through
+                       ``serving/export.atomic_write_text`` — a crash
+                       mid-write must never leave truncated JSON where an
+                       exporter/consumer will parse it.
+  clock-injection      no ambient clock (``time.time``/``perf_counter``/
+                       ...) in serving/ — all timestamps come from the
+                       injectable engine clock, or TTFT/TPOT are
+                       fabricated from mixed clocks (the PR 5 bug class).
+
+Static-analysis honesty: these are linters, not proofs.  Each rule's
+docstring states what it can and cannot see; the runtime
+``analysis/sanitizer.py`` covers the dynamic remainder (e.g. incref/
+decref pairing across functions, which no intraprocedural pass can
+check, is cross-validated against live block tables every engine step).
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Iterable, Optional
+
+from repro.analysis.lint import Finding, LintContext, ModuleInfo
+
+# top-level factory functions whose nested defs are jit-traced: the step
+# builders (runtime/steps.py), the fused sampler factory, and any future
+# make_* factory that returns a function destined for jax.jit
+BUILDER_RE = re.compile(r"^make_\w*$")
+
+# attributes that read static metadata off a tracer — deriving from these
+# does NOT taint (shapes are compile-time constants under jit)
+SHAPE_ATTRS = {"shape", "ndim", "dtype", "size", "itemsize", "sharding"}
+
+# builtins that only inspect a value: passing an alloc-result to these
+# does not transfer ownership
+INSPECTOR_FUNCS = {"len", "bool", "repr", "str", "print", "isinstance",
+                   "type", "sorted", "sum", "min", "max", "any", "all",
+                   "iter", "reversed", "enumerate", "id", "format", "hash"}
+
+
+class Rule:
+    name = ""
+    description = ""
+
+    def check(self, module: ModuleInfo, ctx: LintContext) -> list[Finding]:
+        raise NotImplementedError
+
+    def finding(self, module: ModuleInfo, node: ast.AST, message: str) \
+            -> Finding:
+        return Finding(path=module.path, line=node.lineno,
+                       col=node.col_offset + 1, rule=self.name,
+                       message=message)
+
+
+# ---------------------------------------------------------------------------
+# shared AST helpers
+# ---------------------------------------------------------------------------
+
+def dotted_name(node: ast.expr, module: Optional[ModuleInfo] = None) \
+        -> Optional[str]:
+    """``jax.random.fold_in`` for an Attribute chain over Names, with the
+    head alias resolved through the module's imports (``import numpy as
+    np`` makes ``np.asarray`` read as ``numpy.asarray``)."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if not isinstance(node, ast.Name):
+        return None
+    head = node.id
+    if module is not None:
+        if head in module.import_aliases:
+            head = module.import_aliases[head]
+        elif head in module.from_imports:
+            fmod, orig = module.from_imports[head]
+            head = f"{fmod}.{orig}"
+    parts.append(head)
+    return ".".join(reversed(parts))
+
+
+def _nested_functions(fn: ast.FunctionDef) -> Iterable[ast.FunctionDef]:
+    for node in ast.walk(fn):
+        if node is not fn and isinstance(node, (ast.FunctionDef,
+                                                ast.AsyncFunctionDef)):
+            yield node
+
+
+def _own_statements(fn: ast.FunctionDef) -> Iterable[ast.AST]:
+    """Walk a function's AST *excluding* nested function bodies (those are
+    analyzed as their own scopes)."""
+    stack = list(fn.body)
+    while stack:
+        node = stack.pop()
+        yield node
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.Lambda)):
+                continue
+            stack.append(child)
+
+
+def _jit_static_names(fn: ast.FunctionDef, module: ModuleInfo) \
+        -> Optional[frozenset]:
+    """If ``fn`` is decorated with jax.jit (bare or via functools.partial),
+    return its static_argnames as a frozenset (possibly empty); None when
+    it is not jit-decorated."""
+    for dec in fn.decorator_list:
+        target = dec.func if isinstance(dec, ast.Call) else dec
+        dn = dotted_name(target, module) or ""
+        if dn.endswith("jax.jit") or dn == "jit":
+            return frozenset()
+        if dn.endswith("functools.partial") or dn == "partial":
+            if isinstance(dec, ast.Call) and dec.args:
+                inner = dotted_name(dec.args[0], module) or ""
+                if inner.endswith("jax.jit") or inner == "jit":
+                    static: set[str] = set()
+                    for kw in dec.keywords:
+                        if kw.arg in ("static_argnames", "static_argnums") \
+                                and isinstance(kw.value,
+                                               (ast.Tuple, ast.List)):
+                            for el in kw.value.elts:
+                                if isinstance(el, ast.Constant) \
+                                        and isinstance(el.value, str):
+                                    static.add(el.value)
+                    return frozenset(static)
+    return None
+
+
+def traced_roots(module: ModuleInfo, ctx: LintContext) \
+        -> list[tuple[ModuleInfo, ast.FunctionDef, frozenset]]:
+    """Jit-traced entry functions in ``module``: nested defs of make_*
+    builders (their params are the traced arguments; the builder's own
+    params are trace-time constants), @jax.jit-decorated functions (minus
+    static_argnames), and module functions passed to ``jax.jit(name)``."""
+    roots: list[tuple[ModuleInfo, ast.FunctionDef, frozenset]] = []
+    seen: set[int] = set()
+
+    def add(fn: ast.FunctionDef, static: frozenset) -> None:
+        if id(fn) not in seen:
+            seen.add(id(fn))
+            roots.append((module, fn, static))
+
+    for fn in module.functions.values():
+        static = _jit_static_names(fn, module)
+        if static is not None:
+            add(fn, static)
+        if BUILDER_RE.match(fn.name):
+            for inner in _nested_functions(fn):
+                add(inner, frozenset())
+    for node in ast.walk(module.tree):
+        if isinstance(node, ast.Call):
+            dn = dotted_name(node.func, module) or ""
+            if (dn.endswith("jax.jit") or dn == "jit") and node.args \
+                    and isinstance(node.args[0], ast.Name):
+                target = module.functions.get(node.args[0].id)
+                if target is not None:
+                    add(target, frozenset())
+    return roots
+
+
+def jit_reachable(module: ModuleInfo, ctx: LintContext) \
+        -> list[tuple[ModuleInfo, ast.FunctionDef, bool]]:
+    """Traced roots plus every analyzed function transitively reachable
+    from them via resolvable calls (same-module names, imported modules in
+    the fileset).  The bool marks roots (where traced-argument taint is
+    known) vs transitive callees (host-sync ops only)."""
+    out: list[tuple[ModuleInfo, ast.FunctionDef, bool]] = []
+    visited: set[int] = set()
+    queue: list[tuple[ModuleInfo, ast.FunctionDef]] = []
+    for mod, fn, _static in traced_roots(module, ctx):
+        if id(fn) not in visited:
+            visited.add(id(fn))
+            out.append((mod, fn, True))
+            queue.append((mod, fn))
+    while queue:
+        mod, fn = queue.pop()
+        for node in _own_statements(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            resolved = ctx.resolve_call(mod, node.func)
+            if resolved is None and isinstance(node.func, ast.Name):
+                # nested helper defined in an enclosing builder scope
+                for inner in _nested_functions(fn):
+                    if inner.name == node.func.id:
+                        resolved = (mod, inner)
+                        break
+            if resolved is not None and id(resolved[1]) not in visited:
+                visited.add(id(resolved[1]))
+                out.append((resolved[0], resolved[1], False))
+                queue.append(resolved)
+    return out
+
+
+def compute_taint(fn: ast.FunctionDef, static: frozenset) -> set:
+    """Names holding traced values inside a jit-traced function: the
+    parameters (minus jit static_argnames) plus anything assigned from an
+    expression over them — except pure shape/metadata derivations, which
+    are compile-time constants."""
+    args = fn.args
+    tainted: set[str] = {a.arg for a in (args.posonlyargs + args.args
+                                         + args.kwonlyargs)} - set(static)
+    for extra in (args.vararg, args.kwarg):
+        if extra is not None:
+            tainted.add(extra.arg)
+    for _ in range(2):                      # fixpoint for chained assigns
+        for node in _own_statements(fn):
+            targets = []
+            if isinstance(node, ast.Assign):
+                targets, value = node.targets, node.value
+            elif isinstance(node, ast.AugAssign):
+                targets, value = [node.target], node.value
+            elif isinstance(node, ast.AnnAssign) and node.value is not None:
+                targets, value = [node.target], node.value
+            elif isinstance(node, ast.For):
+                targets, value = [node.target], node.iter
+            else:
+                continue
+            if expr_tainted(value, tainted):
+                for t in targets:
+                    for name in ast.walk(t):
+                        if isinstance(name, ast.Name):
+                            tainted.add(name.id)
+    return tainted
+
+
+def expr_tainted(node: ast.expr, tainted: set) -> bool:
+    """Does evaluating ``node`` produce a traced value?  Shape/metadata
+    accesses and ``len()`` are static under jit and break the taint."""
+    if isinstance(node, ast.Name):
+        return node.id in tainted
+    if isinstance(node, ast.Attribute):
+        if node.attr in SHAPE_ATTRS:
+            return False
+        return expr_tainted(node.value, tainted)
+    if isinstance(node, ast.Call):
+        if isinstance(node.func, ast.Name) and node.func.id == "len":
+            return False
+        parts = list(node.args) + [kw.value for kw in node.keywords]
+        if isinstance(node.func, ast.Attribute):
+            # method call on a traced value (x.sum(), x.astype(...))
+            parts.append(node.func)
+        return any(expr_tainted(p, tainted) for p in parts)
+    if isinstance(node, (ast.Constant, ast.Lambda)):
+        return False
+    return any(expr_tainted(child, tainted)
+               for child in ast.iter_child_nodes(node)
+               if isinstance(child, ast.expr))
+
+
+# ---------------------------------------------------------------------------
+# jit-host-sync
+# ---------------------------------------------------------------------------
+
+class JitHostSync(Rule):
+    """Host-synchronizing ops inside jit-traced code.
+
+    ``print`` on a tracer prints the abstract value once at trace time
+    (silent data loss) or, under ``io_callback`` idioms, blocks the step;
+    ``.item()`` / ``np.asarray`` / ``jax.device_get`` force a device->host
+    transfer that serializes the fused step the engine's whole throughput
+    story rests on.  Checked for the traced roots AND everything they
+    transitively call within the analyzed fileset (runtime/steps.py pulls
+    in the model stack).  ``float()/int()/bool()`` on traced values are
+    flagged in roots, where the traced-argument set is known."""
+    name = "jit-host-sync"
+    description = ("no print/.item()/np.asarray/device_get (host syncs) in "
+                   "jit-traced code or anything it calls")
+
+    def check(self, module: ModuleInfo, ctx: LintContext) -> list[Finding]:
+        findings = []
+        for mod, fn, is_root in jit_reachable(module, ctx):
+            taint = None
+            if is_root:
+                static = _jit_static_names(fn, mod) or frozenset()
+                taint = compute_taint(fn, static)
+            for node in _own_statements(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                f = self._host_op(node, mod, taint)
+                if f is not None:
+                    where = (f"jit-traced `{fn.name}`" if is_root else
+                             f"`{fn.name}` (reached from a jitted scope)")
+                    findings.append(self.finding(
+                        mod, node, f"{f} inside {where} forces a host "
+                        f"sync / trace-time side effect"))
+        return findings
+
+    def _host_op(self, node: ast.Call, mod: ModuleInfo,
+                 taint: Optional[set]) -> Optional[str]:
+        func = node.func
+        if isinstance(func, ast.Name) and func.id == "print":
+            return "print()"
+        if isinstance(func, ast.Attribute) and func.attr == "item" \
+                and not node.args:
+            return ".item()"
+        dn = dotted_name(func, mod) or ""
+        if dn in ("numpy.asarray", "numpy.array"):
+            return f"{dn}()"
+        if dn.endswith("jax.device_get"):
+            return "jax.device_get()"
+        if isinstance(func, ast.Name) and func.id in ("float", "int",
+                                                      "bool") \
+                and taint is not None and node.args \
+                and expr_tainted(node.args[0], taint):
+            return f"{func.id}() on a traced value"
+        return None
+
+
+# ---------------------------------------------------------------------------
+# jit-recompile-hazard
+# ---------------------------------------------------------------------------
+
+class JitRecompileHazard(Rule):
+    """Python control flow on traced values inside a jitted scope.
+
+    ``if x > 0`` on a tracer raises ConcretizationTypeError at trace time
+    (or, with concrete leaves, silently bakes one branch in and
+    recompiles per distinct value).  The engine's fused steps must trace
+    exactly once per shape — branch with ``jnp.where``/``lax.cond``
+    instead.  Branching on ``.shape``/``.ndim``/``len()`` and on builder
+    closure parameters is static and allowed."""
+    name = "jit-recompile-hazard"
+    description = ("no Python if/while/assert on traced values in jitted "
+                   "scopes (use jnp.where / lax.cond)")
+
+    def check(self, module: ModuleInfo, ctx: LintContext) -> list[Finding]:
+        findings = []
+        for mod, fn, static in traced_roots(module, ctx):
+            if mod is not module:
+                continue
+            taint = compute_taint(fn, static)
+            for node in _own_statements(fn):
+                test = None
+                kind = None
+                if isinstance(node, (ast.If, ast.While)):
+                    test, kind = node.test, type(node).__name__.lower()
+                elif isinstance(node, ast.IfExp):
+                    test, kind = node.test, "conditional expression"
+                elif isinstance(node, ast.Assert):
+                    test, kind = node.test, "assert"
+                if test is not None and expr_tainted(test, taint):
+                    findings.append(self.finding(
+                        mod, node,
+                        f"Python `{kind}` on a traced value in jit-traced "
+                        f"`{fn.name}` — recompiles per value or raises at "
+                        f"trace time; use jnp.where/lax.cond"))
+        return findings
+
+
+# ---------------------------------------------------------------------------
+# prng-discipline
+# ---------------------------------------------------------------------------
+
+class PrngDiscipline(Rule):
+    """Serving PRNG keys must be ``fold_in(key, absolute_position)``.
+
+    Preemption-proof determinism (PR 5) requires a token's sampling key
+    to be a pure function of (request seed, absolute position) — with no
+    dependence on batch row, step count, or scheduling history.  ``split``
+    is order-dependent state threading, so it is banned outright in
+    serving/; random draws must take a key that is (a name bound to) a
+    ``fold_in(...)`` result.  Key material for *initialization* outside
+    draw sites is not this rule's concern."""
+    name = "prng-discipline"
+    description = ("serving/ PRNG keys derive via fold_in(seed, position); "
+                   "jax.random.split is banned")
+
+    DRAWS = {"gumbel", "uniform", "normal", "categorical", "bernoulli",
+             "randint", "choice", "truncated_normal", "exponential",
+             "gamma", "poisson", "laplace", "bits", "permutation"}
+
+    def check(self, module: ModuleInfo, ctx: LintContext) -> list[Finding]:
+        if not module.in_serving:
+            return []
+        findings = []
+        scopes = list(module.functions.values())
+        for fn in list(scopes):
+            scopes.extend(_nested_functions(fn))
+        for fn in scopes:
+            findings.extend(self._check_scope(module, fn))
+        return findings
+
+    def _is_random(self, dn: str) -> bool:
+        return ".random." in f".{dn}" or dn.startswith("random.")
+
+    def _check_scope(self, module: ModuleInfo, fn: ast.FunctionDef) \
+            -> list[Finding]:
+        findings = []
+        derived: set[str] = set()          # names bound to fold_in results
+        for node in _own_statements(fn):
+            if isinstance(node, ast.Assign) \
+                    and isinstance(node.value, ast.Call):
+                dn = dotted_name(node.value.func, module) or ""
+                if dn.endswith("fold_in"):
+                    for t in node.targets:
+                        if isinstance(t, ast.Name):
+                            derived.add(t.id)
+        for node in _own_statements(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            dn = dotted_name(node.func, module) or ""
+            attr = dn.rsplit(".", 1)[-1]
+            if attr == "split" and self._is_random(dn):
+                findings.append(self.finding(
+                    module, node,
+                    "jax.random.split in serving/ — key streams must be "
+                    "pure fold_in(seed, absolute_position) derivations or "
+                    "preemption replays a different stream"))
+            elif attr in self.DRAWS and self._is_random(dn):
+                key = node.args[0] if node.args else None
+                for kw in node.keywords:
+                    if kw.arg == "key":
+                        key = kw.value
+                if not self._key_ok(key, module, derived):
+                    findings.append(self.finding(
+                        module, node,
+                        f"jax.random.{attr} with a key not derived via "
+                        f"fold_in(seed, absolute_position) — sampling must "
+                        f"be a pure function of (seed, position) to stay "
+                        f"preemption/restart deterministic"))
+        return findings
+
+    def _key_ok(self, key: Optional[ast.expr], module: ModuleInfo,
+                derived: set) -> bool:
+        if key is None:
+            return False
+        if isinstance(key, ast.Name):
+            return key.id in derived
+        if isinstance(key, ast.Call):
+            dn = dotted_name(key.func, module) or ""
+            return dn.endswith("fold_in")
+        return False
+
+
+# ---------------------------------------------------------------------------
+# refcount-pairing
+# ---------------------------------------------------------------------------
+
+class RefcountPairing(Rule):
+    """Alloc-result ownership on every exit path.
+
+    Tracks locals assigned from ``<allocator>.alloc(...)`` through a
+    simplified per-function control-flow walk.  On every exit (return,
+    raise, end of body) the blocks must have been *consumed*: stored into
+    a table/field, returned, passed to a non-inspecting call (ownership
+    transfer), or freed (``free``/``decref`` — including a loop over the
+    list that decrefs).  Statements that can raise while blocks are
+    unconsumed and no enclosing ``try`` protects them are flagged as
+    exception-edge leaks.  ``if x is None: return`` after an alloc is the
+    sanctioned OOM path (``alloc`` is all-or-nothing) and never flags.
+
+    Intraprocedural by design: cross-function incref/decref pairing (the
+    prefix index holding one ref per committed block, etc.) cannot be
+    proven statically and is instead cross-validated at runtime by
+    ``analysis/sanitizer.py`` against live block tables every step."""
+    name = "refcount-pairing"
+    description = ("BlockAllocator.alloc results must be stored, returned "
+                   "or freed on every exit path (incl. exception edges)")
+
+    def check(self, module: ModuleInfo, ctx: LintContext) -> list[Finding]:
+        findings = []
+        scopes = []
+        for fn in module.functions.values():
+            scopes.append(fn)
+            scopes.extend(_nested_functions(fn))
+        for cls in (n for n in ast.walk(module.tree)
+                    if isinstance(n, ast.ClassDef)):
+            for item in cls.body:
+                if isinstance(item, ast.FunctionDef):
+                    scopes.append(item)
+                    scopes.extend(_nested_functions(item))
+        for fn in scopes:
+            findings.extend(_AllocWalker(self, module, fn).run())
+        return findings
+
+
+def _is_alloc_call(node: ast.expr) -> bool:
+    return isinstance(node, ast.Call) \
+        and isinstance(node.func, ast.Attribute) \
+        and node.func.attr == "alloc"
+
+
+def _names_in(node: ast.AST) -> set:
+    return {n.id for n in ast.walk(node) if isinstance(n, ast.Name)}
+
+
+def _contains_call(node: ast.AST) -> bool:
+    return any(isinstance(n, ast.Call) for n in ast.walk(node))
+
+
+class _AllocWalker:
+    """Simplified path walker for one function (see RefcountPairing)."""
+
+    def __init__(self, rule: RefcountPairing, module: ModuleInfo,
+                 fn: ast.FunctionDef):
+        self.rule, self.module, self.fn = rule, module, fn
+        self.live: dict[str, int] = {}       # name -> alloc line
+        self.findings: list[Finding] = []
+        self.reported: set[tuple] = set()
+        self.protected = 0                   # inside try with handler/finally
+
+    def run(self) -> list[Finding]:
+        terminated = self.block(self.fn.body)
+        if not terminated:
+            self.leak_all(self.fn, "at the end of the function")
+        return self.findings
+
+    # -- reporting ------------------------------------------------------
+    def report(self, node: ast.AST, name: str, why: str) -> None:
+        key = (name, why.split(" ", 1)[0], node.lineno)
+        if key in self.reported:
+            return
+        self.reported.add(key)
+        line = self.live.get(name, node.lineno)
+        self.findings.append(self.rule.finding(
+            self.module, node,
+            f"blocks in `{name}` (allocated line {line}) {why} — every "
+            f"exit path must store, return or free an alloc result"))
+
+    def leak_all(self, node: ast.AST, where: str) -> None:
+        for name in list(self.live):
+            self.report(node, name, f"leak {where}")
+
+    # -- consumption ----------------------------------------------------
+    def consume_in(self, stmt: ast.stmt) -> bool:
+        """Mark tracked names consumed by this statement; True if any."""
+        consumed = False
+        if isinstance(stmt, ast.Assign):
+            names = _names_in(stmt.value) & set(self.live)
+            if names and not _is_alloc_call(stmt.value):
+                # storing (table[x] = blocks / self.f = blocks) or
+                # aliasing transfers ownership
+                for n in names:
+                    del self.live[n]
+                consumed = True
+        elif isinstance(stmt, ast.AugAssign):
+            names = _names_in(stmt.value) & set(self.live)
+            for n in names:
+                del self.live[n]
+            consumed = bool(names)
+        elif isinstance(stmt, ast.Return) and stmt.value is not None:
+            names = _names_in(stmt.value) & set(self.live)
+            for n in names:
+                del self.live[n]
+            consumed = bool(names)
+        elif isinstance(stmt, ast.Expr):
+            consumed = self._consume_calls(stmt.value)
+        elif isinstance(stmt, ast.For):
+            # `for b in blocks: ...decref(b)/free(b)...` frees the list
+            names = _names_in(stmt.iter) & set(self.live)
+            if names and any(
+                    isinstance(n, ast.Call)
+                    and isinstance(n.func, ast.Attribute)
+                    and n.func.attr in ("decref", "free")
+                    for n in ast.walk(stmt)):
+                for n in names:
+                    del self.live[n]
+                consumed = True
+        return consumed
+
+    def _consume_calls(self, expr: ast.expr) -> bool:
+        consumed = False
+        for call in (n for n in ast.walk(expr) if isinstance(n, ast.Call)):
+            if isinstance(call.func, ast.Name) \
+                    and call.func.id in INSPECTOR_FUNCS:
+                continue
+            args = list(call.args) + [kw.value for kw in call.keywords]
+            names = set()
+            for a in args:
+                names |= _names_in(a) & set(self.live)
+            if names:
+                for n in names:
+                    del self.live[n]
+                consumed = True
+        return consumed
+
+    # -- walk -----------------------------------------------------------
+    def block(self, stmts: list) -> bool:
+        """Process a statement list; True if the path surely terminated."""
+        for stmt in stmts:
+            if self.statement(stmt):
+                return True
+        return False
+
+    def statement(self, stmt: ast.stmt) -> bool:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            return False                       # separate scope
+        consumed = self.consume_in(stmt)
+
+        if isinstance(stmt, ast.Assign) and _is_alloc_call(stmt.value) \
+                and len(stmt.targets) == 1 \
+                and isinstance(stmt.targets[0], ast.Name):
+            self.live[stmt.targets[0].id] = stmt.lineno
+            return False
+        if isinstance(stmt, ast.Expr) and _is_alloc_call(stmt.value):
+            self.findings.append(self.rule.finding(
+                self.module, stmt,
+                "alloc() result discarded — the granted blocks can never "
+                "be freed"))
+            return False
+
+        if isinstance(stmt, ast.Return):
+            self.leak_all(stmt, "at this return")
+            return True
+        if isinstance(stmt, ast.Raise):
+            if not self.protected:
+                self.leak_all(stmt, "through this raise")
+            return True
+        if isinstance(stmt, (ast.Break, ast.Continue)):
+            return True
+
+        if isinstance(stmt, ast.If):
+            return self._if(stmt)
+        if isinstance(stmt, ast.Try) or (hasattr(ast, "TryStar")
+                                         and isinstance(stmt, ast.TryStar)):
+            return self._try(stmt)
+        if isinstance(stmt, (ast.For, ast.While)):
+            self.block(stmt.body)
+            self.block(stmt.orelse)
+            return False
+        if isinstance(stmt, ast.With):
+            return self.block(stmt.body)
+
+        # exception edge: a raising call while blocks are live and no
+        # try protects them
+        if not consumed and self.live and not self.protected \
+                and _contains_call(stmt):
+            for name in list(self.live):
+                self.report(stmt, name,
+                            "may leak on this exception edge (the call can "
+                            "raise before ownership transfers; wrap in "
+                            "try/finally or free first)")
+        return False
+
+    def _none_guarded(self, test: ast.expr) -> Optional[str]:
+        """`x is None` / `not x` test → the alloc-failure guard name."""
+        if isinstance(test, ast.Compare) and isinstance(test.left, ast.Name) \
+                and len(test.ops) == 1 \
+                and isinstance(test.ops[0], (ast.Is, ast.Eq)) \
+                and isinstance(test.comparators[0], ast.Constant) \
+                and test.comparators[0].value is None:
+            return test.left.id
+        if isinstance(test, ast.UnaryOp) and isinstance(test.op, ast.Not) \
+                and isinstance(test.operand, ast.Name):
+            return test.operand.id
+        return None
+
+    def _if(self, stmt: ast.If) -> bool:
+        guard = self._none_guarded(stmt.test)
+        saved = dict(self.live)
+        if guard in self.live:
+            del self.live[guard]             # alloc failed: nothing granted
+        body_term = self.block(stmt.body)
+        body_live = self.live
+        self.live = dict(saved)
+        else_term = self.block(stmt.orelse) if stmt.orelse else False
+        else_live = self.live
+        if body_term and (else_term or not stmt.orelse):
+            self.live = else_live if body_term and not else_term else {}
+            if body_term and not stmt.orelse:
+                self.live = else_live
+            return body_term and else_term
+        # a name stays live if it survives any fall-through branch
+        merged: dict[str, int] = {}
+        if not body_term:
+            merged.update(body_live)
+        if not else_term:
+            merged.update(else_live)
+        self.live = merged
+        return False
+
+    def _try(self, stmt) -> bool:
+        protected = bool(stmt.handlers) or bool(stmt.finalbody)
+        if protected:
+            self.protected += 1
+        term = self.block(stmt.body)
+        if protected:
+            self.protected -= 1
+        for handler in stmt.handlers:
+            saved = dict(self.live)
+            self.block(handler.body)
+            self.live = saved
+        self.block(stmt.finalbody)
+        return term and not stmt.finalbody
+
+
+# ---------------------------------------------------------------------------
+# atomic-write
+# ---------------------------------------------------------------------------
+
+class AtomicWrite(Rule):
+    """Serving file writes route through export.atomic_write_text.
+
+    A metrics/trace/snapshot consumer (CI validators, dashboards, the
+    bench) reading a file mid-write must see either the old version or
+    the complete new one — never a truncated JSON.  ``atomic_write_text``
+    (temp file + fsync + ``os.replace``) is the one sanctioned primitive;
+    its own ``os.fdopen`` carries the documented suppression."""
+    name = "atomic-write"
+    description = ("serving/ file writes must use export.atomic_write_text "
+                   "(no bare open(..., 'w'))")
+
+    WRITE_MODES = set("wax+")
+
+    def check(self, module: ModuleInfo, ctx: LintContext) -> list[Finding]:
+        if not module.in_serving:
+            return []
+        findings = []
+        for node in ast.walk(module.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            dn = dotted_name(node.func, module) or ""
+            if dn in ("open", "io.open", "os.fdopen"):
+                mode = node.args[1] if len(node.args) > 1 else None
+                for kw in node.keywords:
+                    if kw.arg == "mode":
+                        mode = kw.value
+                if isinstance(mode, ast.Constant) \
+                        and isinstance(mode.value, str) \
+                        and set(mode.value) & self.WRITE_MODES:
+                    findings.append(self.finding(
+                        module, node,
+                        f"{dn}(..., {mode.value!r}) in serving/ — a crash "
+                        f"mid-write leaves a truncated file; use "
+                        f"serving/export.atomic_write_text"))
+            elif isinstance(node.func, ast.Attribute) \
+                    and node.func.attr in ("write_text", "write_bytes"):
+                findings.append(self.finding(
+                    module, node,
+                    f".{node.func.attr}() in serving/ is not atomic; use "
+                    f"serving/export.atomic_write_text"))
+        return findings
+
+
+# ---------------------------------------------------------------------------
+# clock-injection
+# ---------------------------------------------------------------------------
+
+class ClockInjection(Rule):
+    """No ambient clocks in serving/ — the injectable engine clock only.
+
+    PR 5's TTFT-fabrication bug came from exactly this: synthetic submit
+    timestamps mixed with real ``perf_counter`` first-token stamps
+    produced negative TTFTs.  Every serving timestamp flows from the ONE
+    ``clock`` callable the engine was constructed with (tests inject a
+    synthetic clock and get coherent latencies end to end).  The two
+    sanctioned exceptions — the engine's default clock parameter and the
+    metrics' standalone fallback — carry inline suppressions."""
+    name = "clock-injection"
+    description = ("no time.time/perf_counter/monotonic in serving/ — use "
+                   "the injectable engine clock")
+
+    BANNED = {"time.time", "time.perf_counter", "time.monotonic",
+              "time.process_time", "time.clock", "time.time_ns",
+              "time.perf_counter_ns", "time.monotonic_ns"}
+    BANNED_SUFFIX = ("datetime.now", "datetime.utcnow", "datetime.today")
+
+    def check(self, module: ModuleInfo, ctx: LintContext) -> list[Finding]:
+        if not module.in_serving:
+            return []
+        findings = []
+        for node in ast.walk(module.tree):
+            if not isinstance(node, ast.Attribute):
+                continue
+            dn = dotted_name(node, module) or ""
+            if dn in self.BANNED or dn.endswith(self.BANNED_SUFFIX):
+                findings.append(self.finding(
+                    module, node,
+                    f"`{dn}` in serving/ — all timestamps must come from "
+                    f"the injectable engine clock (mixed clocks fabricate "
+                    f"TTFT/TPOT; see docs/INVARIANTS.md)"))
+        return findings
+
+
+def all_rules() -> list[Rule]:
+    return [JitHostSync(), JitRecompileHazard(), PrngDiscipline(),
+            RefcountPairing(), AtomicWrite(), ClockInjection()]

@@ -116,6 +116,13 @@ def main():
     ap.add_argument("--metrics-window", type=float, default=10.0,
                     help="sliding-window seconds for the workload signal "
                          "vector (default 10)")
+    ap.add_argument("--sanitize", action="store_true",
+                    help="continuous engine only: attach the paged-cache "
+                         "sanitizer (analysis/sanitizer.py) — records "
+                         "allocation sites, cross-validates refcounts "
+                         "against block tables and the prefix index every "
+                         "step, and fails loudly on leaks/double-frees at "
+                         "drain; prints an activity report")
     args = ap.parse_args()
     if args.metrics_every is not None and not args.metrics_out:
         ap.error("--metrics-every needs --metrics-out (snapshots go to "
@@ -148,6 +155,10 @@ def main():
             ap.error("--trace-out/--prom-out/--metrics-every need the "
                      "continuous engine (the wave shim exposes no "
                      "telemetry): use --engine continuous")
+        if args.sanitize:
+            ap.error("--sanitize needs the continuous engine (the wave "
+                     "shim exposes no cache hooks): use --engine "
+                     "continuous")
         from repro.runtime.server import Request, Server
         server = Server(arch, params, mesh, slots=args.slots,
                         max_len=args.max_len,
@@ -175,12 +186,16 @@ def main():
     snapshot = (SnapshotWriter(args.metrics_out + ".jsonl",
                                every_s=args.metrics_every)
                 if args.metrics_every is not None else None)
+    sanitizer = None
+    if args.sanitize:
+        from repro.analysis.sanitizer import CacheSanitizer
+        sanitizer = CacheSanitizer()
     engine = ContinuousBatchingEngine(
         arch, params, mesh, slots=args.slots, max_len=args.max_len,
         block_size=args.block_size, num_blocks=args.num_blocks,
         prefill_chunk=args.prefill_chunk, share_prefix=args.share_prefix,
         metrics=ServingMetrics(window_s=args.metrics_window),
-        tracer=tracer, snapshot=snapshot)
+        tracer=tracer, snapshot=snapshot, sanitizer=sanitizer)
     outs = engine.generate([
         Request(id=i, prompt=p, max_new_tokens=args.max_new,
                 sampling=SamplingParams(temperature=args.temperature,
@@ -228,6 +243,9 @@ def main():
     if args.prom_out:
         atomic_write_text(args.prom_out, prometheus_text(engine.metrics))
         print(f"prometheus -> {args.prom_out}")
+    if sanitizer is not None:
+        # reaching this line means every per-step and drain check passed
+        print(f"sanitizer: clean ({sanitizer.report()})")
 
 
 if __name__ == "__main__":

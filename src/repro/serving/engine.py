@@ -92,6 +92,7 @@ model=2) mesh.
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 from typing import Callable, Iterable, Iterator, Optional, Sequence
 
@@ -227,10 +228,11 @@ class ContinuousBatchingEngine:
                  scheduler: Optional[RequestScheduler] = None,
                  asa: Optional[AdaptiveScheduler] = None,
                  metrics: Optional[ServingMetrics] = None,
-                 clock: Callable[[], float] = time.perf_counter,
+                 clock: Callable[[], float] = time.perf_counter,  # reprolint: disable=clock-injection
                  on_token: Optional[Callable[[int, int], None]] = None,
                  tracer=None, snapshot=None,
-                 step_monitor: Optional[StepMonitor] = None):
+                 step_monitor: Optional[StepMonitor] = None,
+                 sanitizer=None):
         check_servable(arch)           # precise error for excluded archs
         self.arch, self.mesh = arch, mesh
         self.max_len, self.prefill_chunk = max_len, prefill_chunk
@@ -282,6 +284,16 @@ class ContinuousBatchingEngine:
         # and cache geometry at call time instead of per-step pushes
         self.metrics.scheduler_stats = self.scheduler.stats
         self.metrics.cache_stats = self.cache.stats
+        # paged-cache sanitizer (analysis/sanitizer.py): explicit via the
+        # kwarg, or opt-in for a whole test run via REPRO_SANITIZE=1.  The
+        # import is lazy so production engine construction never touches
+        # the analysis package
+        if sanitizer is None and os.environ.get("REPRO_SANITIZE"):
+            from repro.analysis.sanitizer import CacheSanitizer
+            sanitizer = CacheSanitizer()
+        self.sanitizer = sanitizer
+        if self.sanitizer is not None:
+            self.sanitizer.attach(self.cache)
         self.slots = [_Slot(idx=i) for i in range(slots)]
         self.completed: list[RequestOutput] = []
         self._states: dict[int, _ReqState] = {}   # queued or running
@@ -615,6 +627,8 @@ class ContinuousBatchingEngine:
                                   triggered=triggered)
         if self.snapshot is not None:
             self.snapshot.maybe_write(self.metrics, t3)
+        if self.sanitizer is not None:
+            self.sanitizer.check_engine_step(self)
 
     @property
     def has_work(self) -> bool:
@@ -645,6 +659,8 @@ class ContinuousBatchingEngine:
                     f"({self.scheduler.queue_depth} queued, "
                     f"{sum(s.busy for s in self.slots)} busy slots) — "
                     f"admission is wedged")
+        if self.sanitizer is not None:
+            self.sanitizer.check_drained(self)
         return self._clock() - t0
 
     # -- v2 entry points ------------------------------------------------

@@ -39,7 +39,9 @@ def atomic_write_text(path, text: str) -> None:
     fd, tmp = tempfile.mkstemp(dir=d, prefix=os.path.basename(path) + ".",
                                suffix=".tmp")
     try:
-        with os.fdopen(fd, "w") as f:
+        # THE sanctioned raw write: this helper is what the atomic-write
+        # rule tells everyone else to call (temp file, fsync, os.replace)
+        with os.fdopen(fd, "w") as f:  # reprolint: disable=atomic-write
             f.write(text)
             f.flush()
             os.fsync(f.fileno())

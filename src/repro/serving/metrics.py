@@ -105,7 +105,9 @@ class ServingMetrics:
         self._last_t: Optional[float] = None
 
     def _stamp(self, now: Optional[float]) -> float:
-        t = time.perf_counter() if now is None else now
+        # sanctioned fallback for standalone (engine-less) use only: every
+        # engine call site passes its injected clock's ``now`` explicitly
+        t = time.perf_counter() if now is None else now  # reprolint: disable=clock-injection
         if self._last_t is None or t > self._last_t:
             self._last_t = t
         return t

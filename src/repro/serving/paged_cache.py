@@ -69,6 +69,11 @@ class BlockAllocator:
         self.num_blocks = num_blocks
         self._free = list(range(num_blocks - 1, 0, -1))   # pop() -> low ids first
         self._ref: dict[int, int] = {}                    # block -> refcount
+        # opt-in sanitizer hook (analysis/sanitizer.CacheSanitizer): records
+        # allocation sites and raises rich reports on invalid transitions.
+        # None in production — every notification sits behind one attribute
+        # check, so the hot path pays nothing when disabled
+        self.observer = None
 
     @property
     def num_free(self) -> int:
@@ -89,29 +94,39 @@ class BlockAllocator:
         blocks = [self._free.pop() for _ in range(n)]
         for b in blocks:
             self._ref[b] = 1
+        if self.observer is not None:
+            self.observer.on_alloc(blocks)
         return blocks
 
     def incref(self, block: int) -> int:
-        if block == NULL_BLOCK:
-            raise ValueError("cannot reference the null block")
-        if block not in self._ref:
+        if block == NULL_BLOCK or block not in self._ref:
+            if self.observer is not None:
+                self.observer.on_invalid_incref(block)  # raises with sites
+            if block == NULL_BLOCK:
+                raise ValueError("cannot reference the null block")
             raise ValueError(f"incref on unallocated block {block}")
         self._ref[block] += 1
+        if self.observer is not None:
+            self.observer.on_incref(block, self._ref[block])
         return self._ref[block]
 
     def decref(self, block: int) -> int:
         """Drop one reference; at 0 the block returns to the free list.
         Returns the remaining count."""
-        if block == NULL_BLOCK:
-            raise ValueError("cannot free the null block")
-        if block not in self._ref:
+        if block == NULL_BLOCK or block not in self._ref:
+            if self.observer is not None:
+                self.observer.on_invalid_free(block)    # raises with sites
+            if block == NULL_BLOCK:
+                raise ValueError("cannot free the null block")
             raise ValueError(f"double free / foreign block {block}")
         self._ref[block] -= 1
-        if self._ref[block] == 0:
+        remaining = self._ref[block]
+        if remaining == 0:
             del self._ref[block]
             self._free.append(block)
-            return 0
-        return self._ref[block]
+        if self.observer is not None:
+            self.observer.on_decref(block, remaining)
+        return remaining
 
     def free(self, blocks: list[int]) -> None:
         """Drop one reference per block (legacy bulk API).  A block shared

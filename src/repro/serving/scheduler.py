@@ -67,10 +67,13 @@ class RequestScheduler:
 
     def submit(self, req) -> None:
         self.check_submittable(req)
+        self._enqueue(req)
+        self.stats["submitted"] += 1
+
+    def _enqueue(self, req) -> None:
         if getattr(req, "_sched_seq", None) is None:
             req._sched_seq = next(self._seq)   # preserved across preemption
         heapq.heappush(self._heap, (req.priority, req._sched_seq, req))
-        self.stats["submitted"] += 1
 
     @property
     def queue_depth(self) -> int:
@@ -113,11 +116,14 @@ class RequestScheduler:
         return req
 
     def on_finish(self, req) -> None:
+        self._release_budget(req)
+        self.stats["released"] += 1
+
+    def _release_budget(self, req) -> None:
         charged = getattr(req, "_charged_footprint", None)
         self._in_flight_tokens -= (self._footprint(req) if charged is None
                                    else charged)
         req._charged_footprint = None
-        self.stats["released"] += 1
 
     # -- preemption ---------------------------------------------------------
     def pick_preemption_victim(self, running: list):
@@ -136,7 +142,15 @@ class RequestScheduler:
 
     def preempt(self, req) -> None:
         """Return a running request to the queue (recompute-style: its
-        generated tokens stay on the request and are re-prefilled)."""
-        self.on_finish(req)
-        self.submit(req)
+        generated tokens stay on the request and are re-prefilled).
+
+        Only ``preemptions`` counts here: routing through on_finish() +
+        submit() — as this used to — inflated both ``released`` and
+        ``submitted`` by one per preemption, so the exported lifecycle
+        counters overstated client submissions AND completions whenever
+        the engine ran under cache pressure.  The budget charge is still
+        released (the request no longer holds cache) and the request
+        re-enters with its original seq (head of its priority class)."""
+        self._release_budget(req)
+        self._enqueue(req)
         self.stats["preemptions"] += 1

@@ -434,6 +434,42 @@ def test_scheduler_preemption_victim_and_requeue_order():
     assert s.pick_preemption_victim([hi, running[1]]).id == running[1].id
 
 
+def test_preemption_does_not_inflate_lifecycle_counters():
+    """Regression (found while cross-validating sanitizer counters against
+    scheduler telemetry): preempt() used to route through on_finish() +
+    submit(), so every preemption bumped both `released` and `submitted`
+    — the exported Prometheus/JSONL lifecycle counters overstated client
+    submissions and completions whenever the engine ran under cache
+    pressure.  A preemption is neither: only `preemptions` may move."""
+    s = RequestScheduler(max_tokens_in_flight=100)
+    r = _req(0)
+    s.submit(r)
+    assert s.next_admission() is r
+    seq = r._sched_seq
+    s.preempt(r)
+    assert s.stats == {"submitted": 1, "admitted": 1, "budget_refusals": 0,
+                       "preemptions": 1, "released": 0}
+    assert s._in_flight_tokens == 0           # budget charge still released
+    assert r._sched_seq == seq                # head-of-class re-entry kept
+    assert s.next_admission() is r
+    s.on_finish(r)
+    assert s.stats["released"] == 1 and s.stats["submitted"] == 1
+
+    # end-to-end: under forced preemption, submitted == client submissions
+    # and released == completions
+    eng = ContinuousBatchingEngine(
+        TINY, _params_for(TINY), make_host_mesh(), slots=3, max_len=64,
+        num_blocks=10, block_size=4, prefill_chunk=8)
+    reqs = [Request(id=i, prompt=np.arange(1, 11, dtype=np.int32),
+                    max_new_tokens=8) for i in range(6)]
+    eng.generate(reqs)
+    st = eng.scheduler.stats
+    assert st["preemptions"] > 0              # pressure actually happened
+    assert st["submitted"] == len(reqs)
+    assert st["released"] == len(reqs)
+    assert st["admitted"] == len(reqs) + st["preemptions"]  # re-admissions
+
+
 def test_preemption_victim_ranks_by_resident_footprint():
     """Regression: the docstring promises 'frees the most blocks per
     preemption' but the ranking used len(out_tokens) — a long-prompt
