@@ -1,29 +1,38 @@
 """Mechanical enforcement of the serving stack's invariants.
 
-Two complementary halves:
+Three complementary layers:
 
   * ``repro.analysis.lint`` — reprolint, an AST static-analysis pass
     (``python -m repro.analysis.lint src/repro``) whose rules check jit
     hygiene, PRNG discipline, alloc/free pairing, atomic writes and
     clock injection from program structure.  Stdlib-only.
+  * ``repro.analysis.tracecheck`` (+ ``ircost``) — IR-level analysis of
+    the jitted serving steps (``python -m repro.analysis.tracecheck``):
+    trace-cache budgets, buffer-donation audit, host-transfer detection,
+    sharding conformance and static cost extraction over the lowered
+    jaxpr / compiled executable of every registry arch.
   * ``repro.analysis.sanitizer`` — a runtime paged-cache sanitizer that
     records allocation sites and cross-validates refcounts against live
     block tables and the prefix index every engine step.
 
-The sanitizer half touches the jax-backed cache, so it is exported
-lazily: importing ``repro.analysis`` (as the CI lint job does, with no
-jax installed) must never pull in jax.
+The tracecheck/sanitizer layers touch jax, so they are exported lazily:
+importing ``repro.analysis`` (as the CI lint job does, with no jax
+installed) must never pull in jax.
 """
 import importlib
 
-__all__ = ["Finding", "Linter", "ModuleInfo",
-           "CacheSanitizer", "SanitizerError"]
+__all__ = ["Finding", "Linter", "ModuleInfo", "emit_findings",
+           "CacheSanitizer", "SanitizerError",
+           "run_analyzers", "collect_bench", "validate_bench", "ServeGeom"]
 
-# everything is lazy: the sanitizer half must not import jax when only
-# the linter is wanted, and eagerly importing lint here would trip
-# runpy's double-import warning for `python -m repro.analysis.lint`
+# everything is lazy: the sanitizer/tracecheck halves must not import jax
+# when only the linter is wanted, and eagerly importing lint here would
+# trip runpy's double-import warning for `python -m repro.analysis.lint`
 _EXPORTS = {"Finding": "lint", "Linter": "lint", "ModuleInfo": "lint",
-            "CacheSanitizer": "sanitizer", "SanitizerError": "sanitizer"}
+            "emit_findings": "lint",
+            "CacheSanitizer": "sanitizer", "SanitizerError": "sanitizer",
+            "run_analyzers": "tracecheck", "collect_bench": "tracecheck",
+            "validate_bench": "tracecheck", "ServeGeom": "ircost"}
 
 
 def __getattr__(name):

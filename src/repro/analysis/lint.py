@@ -36,6 +36,7 @@ from __future__ import annotations
 import argparse
 import ast
 import dataclasses
+import json
 import pathlib
 import re
 import sys
@@ -56,6 +57,36 @@ class Finding:
     def format(self) -> str:
         return f"{self.path}:{self.line}:{self.col}: {self.rule}: " \
                f"{self.message}"
+
+
+def emit_findings(findings: list, fmt: str, *, tool: str = "reprolint",
+                  stream=None) -> None:
+    """Render findings in one of the CLI output formats — shared by
+    reprolint and tracecheck (repro.analysis.tracecheck).
+
+    text    the classic ``path:line:col: rule: message`` lines
+    json    a machine-readable array (the whole stream is valid JSON —
+            summaries go to stderr, never here)
+    github  GitHub Actions workflow commands: the CI jobs emit these so
+            findings surface as inline PR annotations
+    """
+    stream = stream if stream is not None else sys.stdout
+    if fmt == "json":
+        json.dump([dataclasses.asdict(f) for f in findings], stream,
+                  indent=1)
+        stream.write("\n")
+    elif fmt == "github":
+        for f in findings:
+            # newlines terminate a workflow command; escape per the spec
+            msg = f.message.replace("%", "%25").replace("\r", "%0D") \
+                           .replace("\n", "%0A")
+            stream.write(f"::error file={f.path},line={f.line},"
+                         f"col={f.col},title={tool}({f.rule})::{msg}\n")
+    elif fmt == "text":
+        for f in findings:
+            stream.write(f.format() + "\n")
+    else:
+        raise ValueError(f"unknown findings format {fmt!r}")
 
 
 class ModuleInfo:
@@ -219,6 +250,10 @@ def main(argv: Optional[list[str]] = None) -> int:
                     help="comma-separated rule names to run (default: all)")
     ap.add_argument("--list-rules", action="store_true",
                     help="print the rule catalogue and exit")
+    ap.add_argument("--format", default="text",
+                    choices=("text", "json", "github"),
+                    help="finding output format (github: workflow "
+                         "annotations for inline PR review)")
     args = ap.parse_args(argv)
     if args.list_rules:
         for r in all_rules():
@@ -233,11 +268,13 @@ def main(argv: Optional[list[str]] = None) -> int:
             raise SystemExit(f"reprolint: unknown rule(s) "
                              f"{sorted(unknown)}; see --list-rules")
     findings = Linter(select=select).lint_paths(args.paths or ["src/repro"])
-    for f in findings:
-        print(f.format())
+    emit_findings(findings, args.format)
     n = len(findings)
-    print(f"reprolint: {n} finding{'s' if n != 1 else ''}"
-          if n else "reprolint: clean")
+    summary = (f"reprolint: {n} finding{'s' if n != 1 else ''}"
+               if n else "reprolint: clean")
+    # json output must stay parseable as a whole; github annotations keep
+    # the log scannable — route the human summary to stderr there
+    print(summary, file=sys.stdout if args.format == "text" else sys.stderr)
     return 1 if findings else 0
 
 

@@ -1,0 +1,531 @@
+"""tracecheck: IR-level static analysis of the jitted serving steps.
+
+reprolint (repro.analysis.lint) checks invariants from *source* structure;
+tracecheck checks the ones only visible in the *lowered IR*.  Every
+registered serving step (make_paged_prefill_step / make_paged_decode_step /
+make_slot_admit_step) is traced for every registry architecture (reduced
+via ``configs.reduce_for_smoke``) and a set of pluggable analyzers walks
+the jaxpr / lowered module / compiled executable:
+
+  trace-cache    run a mixed serve workload (short+long prompts, greedy and
+                 nucleus rows, forced preemption) through a real engine and
+                 gate each jitted step's compile count (``_cache_size()``)
+                 against TRACE_BUDGETS — a shape leak that would recompile
+                 in production fails here first.
+  donation       the cache carry must be donated per ST.STEP_DONATION in
+                 every step, the donation must actually be elided in the
+                 buffer assignment (alias_size), and no other large operand
+                 may ride along undonated.
+  host-transfer  no callback/infeed/outfeed primitive anywhere in the step
+                 jaxpr, and the only host-bound outputs are the sanctioned
+                 per-row (B,) token/logprob vectors — everything else must
+                 be the cache carry.
+  sharding       under the 8-device (data=4, model=2) host mesh, the
+                 compiled step's cache *output* shardings must match the
+                 ``core/sharding.paged_cache_specs`` declarations — XLA
+                 silently replicating a pool would 2x serving HBM.
+  cost-drift     XLA's static cost analysis of each compiled step (FLOPs /
+                 bytes accessed / peak temps, via analysis/ircost.py) must
+                 agree with ``core/costmodel.predict_serving_step`` within
+                 the declared tolerances; the pair is committed to
+                 BENCH_static_costs.json as the serving cost vector.
+
+CLI mirrors reprolint::
+
+    PYTHONPATH=src python -m repro.analysis.tracecheck
+    PYTHONPATH=src python -m repro.analysis.tracecheck \\
+        --arch qwen3-8b,mamba2-780m --select donation,host-transfer
+    PYTHONPATH=src python -m repro.analysis.tracecheck \\
+        --write-bench BENCH_static_costs.json
+    PYTHONPATH=src python -m repro.analysis.tracecheck \\
+        --validate-bench BENCH_static_costs.json
+
+Exit status 1 on any finding (the CI gate), 0 when clean.
+"""
+from __future__ import annotations
+
+import os
+
+# The sharding-conformance analyzer needs the engine's CI mesh (data=4,
+# model=2) — request 8 host devices BEFORE jax initializes.  setdefault:
+# a no-op under the CI job env or an embedding test session that already
+# chose its device count.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+
+import argparse
+import dataclasses
+import json
+import sys
+from typing import Iterable, Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+
+from repro import configs
+from repro.analysis import ircost as IC
+from repro.analysis.lint import Finding, emit_findings
+from repro.core import costmodel as CM
+from repro.launch.mesh import make_host_mesh
+from repro.models import transformer as T
+from repro.runtime import steps as ST
+
+# Per-step compile-count budgets for one drained mixed workload: chunked
+# prefill pads to one shape, decode always advances the full slot batch,
+# and admission resets one scalar-indexed slot — exactly one trace each.
+TRACE_BUDGETS = {"paged_prefill": 1, "paged_decode": 1, "slot_admit": 1}
+
+DEFAULT_GEOM = IC.ServeGeom()
+
+
+def serve_mesh():
+    """The largest (data, model=2) host mesh the process offers — the CI
+    jobs run with XLA_FLAGS=--xla_force_host_platform_device_count=8,
+    giving the engine's (4, 2) serving mesh."""
+    n = jax.device_count()
+    return make_host_mesh(model=2 if n % 2 == 0 and n >= 2 else 1)
+
+
+@dataclasses.dataclass
+class ArchContext:
+    """Everything the analyzers share for one architecture: the smoke-
+    reduced arch, serve geometry, mesh + ASA plan, and memoized lowerings."""
+    arch: object
+    geom: IC.ServeGeom
+    mesh: object
+    _plan: object = None
+
+    @classmethod
+    def for_arch(cls, name: str, geom: IC.ServeGeom = DEFAULT_GEOM,
+                 mesh=None) -> "ArchContext":
+        arch = configs.reduce_for_smoke(configs.get_arch(name))
+        return cls(arch, geom, mesh if mesh is not None else serve_mesh())
+
+    @property
+    def plan(self):
+        if self._plan is None:
+            self._plan = IC.build_plan(self.arch, self.geom, self.mesh)
+        return self._plan
+
+    def kinds(self) -> tuple[str, ...]:
+        return IC.step_kinds(self.arch)
+
+    def lowered(self, kind: str, *, meshful: bool) -> IC.LoweredStep:
+        return IC.lower_step(self.arch, kind, self.geom,
+                             mesh=self.mesh if meshful else None,
+                             plan=self.plan if meshful else None)
+
+    def finding(self, kind: str, analyzer: str, message: str) -> Finding:
+        return Finding(path=f"{self.arch.name}/{kind}", line=0, col=0,
+                       rule=analyzer, message=message)
+
+
+# ---------------------------------------------------------------------------
+# analyzer 1: trace-cache audit (runs a real engine)
+# ---------------------------------------------------------------------------
+
+def _mixed_workload(ctx: ArchContext):
+    """Requests spanning the shape space that historically caused trace
+    leaks: short/long prompts (different chunk counts), greedy alongside
+    nucleus-sampled rows, logprobs on/off, and a block pool tight enough
+    to force preemption + re-admission."""
+    from repro.serving.engine import Request
+    from repro.serving.sampling import GREEDY, SamplingParams
+
+    arch = ctx.arch
+    frontend = None
+    if arch.frontend == "vision":
+        frontend = np.zeros((1, arch.n_img_tokens, arch.d_model), np.float32)
+    elif arch.frontend == "audio":
+        frontend = np.zeros((1, arch.encoder.seq_len, arch.d_model),
+                            np.float32)
+    sampling = [GREEDY,
+                SamplingParams(temperature=0.8, top_k=50),
+                SamplingParams(temperature=1.0, top_p=0.9),
+                SamplingParams(logprobs=True)]
+    reqs = []
+    for i, (plen, mnt) in enumerate([(3, 20), (13, 12), (9, 16), (21, 6)]):
+        reqs.append(Request(
+            id=i, prompt=(np.arange(plen) % arch.vocab).astype(np.int32),
+            max_new_tokens=mnt, sampling=sampling[i % len(sampling)],
+            frontend=frontend))
+    return reqs
+
+
+def check_trace_cache(ctx: ArchContext) -> list[Finding]:
+    from repro.serving.engine import ContinuousBatchingEngine
+
+    arch = ctx.arch
+    params = jax.jit(lambda k: T.init_lm(k, arch))(jax.random.PRNGKey(0))
+    # slots=2 with a 12-usable-block pool: two in-flight requests need 13
+    # blocks at peak, so the decode loop must preempt and re-admit —
+    # recompute prefill re-traces through the same padded chunk shape
+    eng = ContinuousBatchingEngine(
+        arch, params, ctx.mesh, slots=2, max_len=48, block_size=4,
+        num_blocks=13, prefill_chunk=8)
+    eng.generate(_mixed_workload(ctx))
+
+    findings = []
+    jitted = {"paged_prefill": eng._prefill, "paged_decode": eng._decode}
+    if eng._admit_slot_state is not None:
+        jitted["slot_admit"] = eng._admit_slot_state
+    for kind, fn in jitted.items():
+        n = fn._cache_size()
+        if n == 0:
+            findings.append(ctx.finding(
+                kind, "trace-cache",
+                "step never executed during the audit workload — the "
+                "budget check proved nothing"))
+        elif n > TRACE_BUDGETS[kind]:
+            findings.append(ctx.finding(
+                kind, "trace-cache",
+                f"compiled {n} distinct trace signatures over one drained "
+                f"mixed workload (budget {TRACE_BUDGETS[kind]}) — an "
+                f"argument shape/dtype is leaking into the trace"))
+    if eng.metrics.preemptions == 0:
+        findings.append(ctx.finding(
+            "paged_decode", "trace-cache",
+            "audit workload finished without a preemption — the tight-pool "
+            "scenario no longer exercises recompute re-admission"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# analyzer 2: donation audit
+# ---------------------------------------------------------------------------
+
+def check_donation(ctx: ArchContext) -> list[Finding]:
+    findings = []
+    for kind in ctx.kinds():
+        ls = ctx.lowered(kind, meshful=False)
+        rep = IC.donation_report(ls)
+        want = ST.STEP_DONATION[kind]
+        if rep["donated_args"] != want:
+            findings.append(ctx.finding(
+                kind, "donation",
+                f"donated args {rep['donated_args']} != STEP_DONATION "
+                f"convention {want}"))
+        elif rep["alias_bytes"] < rep["cache_bytes"]:
+            findings.append(ctx.finding(
+                kind, "donation",
+                f"cache donation not elided: buffer assignment aliases "
+                f"{rep['alias_bytes']} of {rep['cache_bytes']} cache bytes "
+                f"— the pool is double-resident during the step"))
+        for i, nbytes in enumerate(rep["arg_bytes"]):
+            if i == 0 or i in want:        # params are read-only by design
+                continue
+            if nbytes >= 0.25 * rep["cache_bytes"]:
+                findings.append(ctx.finding(
+                    kind, "donation",
+                    f"operand {i} holds {nbytes} undonated bytes "
+                    f"(>=25% of the cache) with no convention entry"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# analyzer 3: host-transfer / callback detection
+# ---------------------------------------------------------------------------
+
+_HOST_PRIM_MARKERS = ("callback", "infeed", "outfeed")
+
+
+def check_host_transfer(ctx: ArchContext) -> list[Finding]:
+    findings = []
+    for kind in ctx.kinds():
+        ls = ctx.lowered(kind, meshful=False)
+        bad = sorted(p for p in IC.primitive_census(ls)
+                     if any(m in p for m in _HOST_PRIM_MARKERS))
+        for prim in bad:
+            findings.append(ctx.finding(
+                kind, "host-transfer",
+                f"host-crossing primitive {prim!r} inside the jitted step "
+                f"— serving steps must stay device-resident"))
+        outs = IC.output_structure(ls)
+        cache_td = jax.tree.structure(ls.args[ls.cache_index])
+        if kind == "slot_admit":
+            if jax.tree.structure(outs) != cache_td:
+                findings.append(ctx.finding(
+                    kind, "host-transfer",
+                    "slot_admit must return exactly the cache carry"))
+            continue
+        B = ls.args[2].shape[0]
+        ok = (isinstance(outs, tuple) and len(outs) == 3
+              and outs[0].shape == (B,) and outs[1].shape == (B,)
+              and jax.tree.structure(outs[2]) == cache_td)
+        if not ok:
+            findings.append(ctx.finding(
+                kind, "host-transfer",
+                f"outputs are not the sanctioned (token (B,), logprob "
+                f"(B,), cache) contract (B={B}) — any extra output is an "
+                f"unsanctioned device->host transfer per step"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# analyzer 4: sharding conformance
+# ---------------------------------------------------------------------------
+
+def check_sharding(ctx: ArchContext) -> list[Finding]:
+    findings = []
+    expected = jax.tree.map(lambda s: NamedSharding(ctx.mesh, s),
+                            ctx.plan.paged_cache_specs())
+    exp_flat, exp_td = jax.tree.flatten(expected)
+    for kind in ctx.kinds():
+        ls = ctx.lowered(kind, meshful=True)
+        out_sh = IC.output_shardings(ls)
+        outs = IC.output_structure(ls)
+        cache_sh = out_sh if kind == "slot_admit" else out_sh[2]
+        cache_sds = outs if kind == "slot_admit" else outs[2]
+        got, got_td = jax.tree.flatten(cache_sh)
+        if got_td != exp_td:
+            findings.append(ctx.finding(
+                kind, "sharding",
+                f"cache output tree {got_td} does not match "
+                f"paged_cache_specs tree"))
+            continue
+        paths = [jax.tree_util.keystr(p) for p, _ in
+                 jax.tree_util.tree_flatten_with_path(cache_sds)[0]]
+        for path, sds, g, w in zip(
+                paths, jax.tree.leaves(cache_sds), got, exp_flat):
+            if not g.is_equivalent_to(w, len(sds.shape)):
+                findings.append(ctx.finding(
+                    kind, "sharding",
+                    f"cache pool {path} compiled to {g.spec} but "
+                    f"core/sharding.paged_cache_specs declares {w.spec}"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# analyzer 5: static cost extraction / drift vs core/costmodel.py
+# ---------------------------------------------------------------------------
+
+def bench_row(ctx: ArchContext, kind: str) -> dict:
+    """Extracted-vs-predicted static cost for one (arch, step) cell — one
+    row of BENCH_static_costs.json."""
+    ls = ctx.lowered(kind, meshful=False)
+    rep = IC.cost_report(ls)
+    batch = 1 if kind == "paged_prefill" else ctx.geom.slots
+    new_tokens = ctx.geom.prefill_chunk if kind == "paged_prefill" else 1
+    pred = CM.predict_serving_step(ctx.arch, batch=batch,
+                                   new_tokens=new_tokens,
+                                   table_len=ctx.geom.table_len)
+    flops_rel_err = abs(rep["flops"] - pred["flops"]) / max(pred["flops"], 1.0)
+    lo = max(min(rep["bytes"], pred["bytes"]), 1.0)
+    bytes_ratio = max(rep["bytes"], pred["bytes"]) / lo
+    return {
+        "arch": ctx.arch.name, "step": kind,
+        "batch": batch, "new_tokens": new_tokens,
+        "table_len": ctx.geom.table_len,
+        "flops_extracted": rep["flops"], "flops_predicted": pred["flops"],
+        "flops_rel_err": round(flops_rel_err, 4),
+        "bytes_extracted": rep["bytes"], "bytes_predicted": pred["bytes"],
+        "bytes_ratio": round(bytes_ratio, 2),
+        "temp_bytes_peak": rep["temp_bytes"],
+    }
+
+
+def check_cost_drift(ctx: ArchContext) -> list[Finding]:
+    findings = []
+    for kind in ("paged_prefill", "paged_decode"):
+        row = bench_row(ctx, kind)
+        if row["flops_rel_err"] > CM.SERVING_FLOPS_RTOL:
+            findings.append(ctx.finding(
+                kind, "cost-drift",
+                f"extracted {row['flops_extracted']:.3g} FLOPs vs "
+                f"predicted {row['flops_predicted']:.3g} — rel err "
+                f"{row['flops_rel_err']:.2f} > SERVING_FLOPS_RTOL "
+                f"{CM.SERVING_FLOPS_RTOL} (costmodel.predict_serving_step "
+                f"no longer models this step)"))
+        if row["bytes_ratio"] > CM.SERVING_BYTES_RFACTOR:
+            findings.append(ctx.finding(
+                kind, "cost-drift",
+                f"extracted {row['bytes_extracted']:.3g} bytes vs "
+                f"predicted {row['bytes_predicted']:.3g} — ratio "
+                f"{row['bytes_ratio']:.1f} > SERVING_BYTES_RFACTOR "
+                f"{CM.SERVING_BYTES_RFACTOR}"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+ANALYZERS = {
+    "trace-cache": (check_trace_cache,
+                    "compile-count budgets over a drained mixed workload"),
+    "donation": (check_donation,
+                 "cache donated per STEP_DONATION and elided in buffers"),
+    "host-transfer": (check_host_transfer,
+                      "no callbacks; only (B,) token/logprob leave device"),
+    "sharding": (check_sharding,
+                 "cache output shardings match paged_cache_specs"),
+    "cost-drift": (check_cost_drift,
+                   "XLA static costs agree with costmodel predictions"),
+}
+
+
+def run_analyzers(arch_names: Optional[Iterable[str]] = None,
+                  select: Optional[Iterable[str]] = None,
+                  geom: IC.ServeGeom = DEFAULT_GEOM,
+                  mesh=None) -> list[Finding]:
+    names = sorted(arch_names) if arch_names else sorted(configs.ARCHS)
+    chosen = list(select) if select else list(ANALYZERS)
+    mesh = mesh if mesh is not None else serve_mesh()
+    findings: list[Finding] = []
+    for name in names:
+        ctx = ArchContext.for_arch(name, geom, mesh)
+        for a in chosen:
+            findings.extend(ANALYZERS[a][0](ctx))
+    return sorted(findings)
+
+
+# ---------------------------------------------------------------------------
+# BENCH_static_costs.json
+# ---------------------------------------------------------------------------
+
+BENCH_ROW_FIELDS = ("arch", "step", "batch", "new_tokens", "table_len",
+                    "flops_extracted", "flops_predicted", "flops_rel_err",
+                    "bytes_extracted", "bytes_predicted", "bytes_ratio",
+                    "temp_bytes_peak")
+
+
+def collect_bench(arch_names: Optional[Iterable[str]] = None,
+                  geom: IC.ServeGeom = DEFAULT_GEOM) -> dict:
+    names = sorted(arch_names) if arch_names else sorted(configs.ARCHS)
+    rows = []
+    for name in names:
+        ctx = ArchContext.for_arch(name, geom)
+        for kind in ("paged_prefill", "paged_decode"):
+            rows.append(bench_row(ctx, kind))
+    return {
+        "schema_version": 1,
+        "geometry": dataclasses.asdict(geom),
+        "tolerances": {"flops_rtol": CM.SERVING_FLOPS_RTOL,
+                       "bytes_rfactor": CM.SERVING_BYTES_RFACTOR},
+        "rows": rows,
+    }
+
+
+def validate_bench(doc: dict,
+                   require_archs: Optional[Iterable[str]] = None) \
+        -> list[str]:
+    """Schema + tolerance validation of a committed BENCH_static_costs.json
+    (the CI check that the committed cost vector is well-formed and within
+    its own declared drift bounds).  Returns human-readable errors."""
+    errors = []
+    for key in ("schema_version", "geometry", "tolerances", "rows"):
+        if key not in doc:
+            errors.append(f"missing top-level key {key!r}")
+    if errors:
+        return errors
+    tol = doc["tolerances"]
+    for t in ("flops_rtol", "bytes_rfactor"):
+        if not isinstance(tol.get(t), (int, float)):
+            errors.append(f"tolerances.{t} missing or non-numeric")
+    seen = set()
+    for i, row in enumerate(doc["rows"]):
+        for f in BENCH_ROW_FIELDS:
+            if f not in row:
+                errors.append(f"rows[{i}] missing field {f!r}")
+                break
+        else:
+            if not all(isinstance(row[f], (int, float))
+                       for f in BENCH_ROW_FIELDS[2:]):
+                errors.append(f"rows[{i}] has non-numeric cost fields")
+                continue
+            seen.add((row["arch"], row["step"]))
+            if row["flops_rel_err"] > tol.get("flops_rtol", 0):
+                errors.append(
+                    f"rows[{i}] ({row['arch']}/{row['step']}): "
+                    f"flops_rel_err {row['flops_rel_err']} exceeds "
+                    f"declared flops_rtol {tol.get('flops_rtol')}")
+            if row["bytes_ratio"] > tol.get("bytes_rfactor", 0):
+                errors.append(
+                    f"rows[{i}] ({row['arch']}/{row['step']}): "
+                    f"bytes_ratio {row['bytes_ratio']} exceeds declared "
+                    f"bytes_rfactor {tol.get('bytes_rfactor')}")
+    for name in (sorted(require_archs) if require_archs
+                 else sorted(configs.ARCHS)):
+        smoke = name + "-smoke"
+        for kind in ("paged_prefill", "paged_decode"):
+            if (smoke, kind) not in seen:
+                errors.append(f"no row for {smoke}/{kind}")
+    return errors
+
+
+# ---------------------------------------------------------------------------
+# CLI (mirrors reprolint)
+# ---------------------------------------------------------------------------
+
+def main(argv: Optional[list[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.tracecheck",
+        description="IR-level static analysis of the jitted serving steps")
+    ap.add_argument("--arch", default=None,
+                    help="comma-separated registry arch names "
+                         "(default: the whole registry)")
+    ap.add_argument("--select", default=None,
+                    help="comma-separated analyzer names (default: all)")
+    ap.add_argument("--list-analyzers", action="store_true",
+                    help="print the analyzer catalogue and exit")
+    ap.add_argument("--format", default="text",
+                    choices=("text", "json", "github"),
+                    help="finding output format (github: workflow "
+                         "annotations)")
+    ap.add_argument("--write-bench", metavar="PATH", default=None,
+                    help="extract static costs for every arch and write "
+                         "the BENCH_static_costs.json document to PATH")
+    ap.add_argument("--validate-bench", metavar="PATH", default=None,
+                    help="schema/tolerance-check a committed bench file "
+                         "and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_analyzers:
+        for name, (_, desc) in ANALYZERS.items():
+            print(f"{name:16s} {desc}")
+        return 0
+
+    if args.validate_bench:
+        with open(args.validate_bench) as f:
+            errors = validate_bench(json.load(f))
+        for e in errors:
+            print(f"{args.validate_bench}: {e}")
+        print(f"tracecheck: bench "
+              f"{'INVALID' if errors else 'valid'} ({len(errors)} errors)")
+        return 1 if errors else 0
+
+    archs = ([a.strip() for a in args.arch.split(",") if a.strip()]
+             if args.arch else None)
+    for a in archs or []:
+        configs.get_arch(a)            # precise unknown-arch error
+
+    if args.write_bench:
+        doc = collect_bench(archs)
+        with open(args.write_bench, "w") as f:
+            json.dump(doc, f, indent=1, sort_keys=True)
+            f.write("\n")
+        worst = max((r["flops_rel_err"] for r in doc["rows"]), default=0.0)
+        print(f"tracecheck: wrote {len(doc['rows'])} rows to "
+              f"{args.write_bench} (worst flops_rel_err {worst:.3f})")
+        return 0
+
+    select = ({s.strip() for s in args.select.split(",") if s.strip()}
+              if args.select else None)
+    if select:
+        unknown = select - set(ANALYZERS)
+        if unknown:
+            raise SystemExit(f"tracecheck: unknown analyzer(s) "
+                             f"{sorted(unknown)}; see --list-analyzers")
+    findings = run_analyzers(archs, select)
+    emit_findings(findings, args.format, tool="tracecheck")
+    n = len(findings)
+    if args.format == "text":
+        print(f"tracecheck: {n} finding{'s' if n != 1 else ''}"
+              if n else "tracecheck: clean")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -117,6 +117,26 @@ def _moe_flops(arch: ArchConfig, B, S):
     return f
 
 
+def _moe_flops_capacity(arch: ArchConfig, B, S):
+    """FLOPs the capacity-based dispatch (models/moe.py) actually executes:
+    every expert computes its full capacity ``C = cf*K*S/E`` of token rows
+    (padded or not), plus the dispatch/combine einsums — this is what the
+    lowered IR's cost analysis counts, unlike the analytic top-k routing
+    of :func:`_moe_flops` which undercounts by ~capacity_factor."""
+    m = arch.moe
+    D = arch.d_model
+    E, K = m.n_experts, m.top_k
+    C = max(1, int(m.capacity_factor * K * S / E))
+    f = 2 * B * S * D * E                                # router
+    f += _mlp_flops(D, m.d_ff, B, E * C)                 # E experts x C rows
+    f += 2 * 2 * B * S * E * C * D                       # dispatch + combine
+    if m.n_shared_experts:
+        f += _mlp_flops(D, m.shared_d_ff or m.d_ff, B, S)
+    if m.dense_d_ff:
+        f += _mlp_flops(D, m.dense_d_ff, B, S)
+    return f
+
+
 def _mamba_flops(arch: ArchConfig, B, S, decode=False):
     s = arch.ssm
     D = arch.d_model
@@ -179,13 +199,28 @@ N_ALLREDUCE = {"attn": 2, "enc_attn": 2, "moe_attn": 1, "mla": 1, "mla_dense": 2
 
 
 def build_components(arch: ArchConfig, *, seq_len: int, batch: int,
-                     mode: str = "train") -> list[Component]:
+                     mode: str = "train", attn_span: Optional[int] = None,
+                     moe_capacity: bool = False) -> list[Component]:
     """mode: train | prefill | decode.  For decode, S=1 and attention spans
-    the full ``seq_len`` cache."""
+    the full ``seq_len`` cache.
+
+    ``attn_span`` overrides the effective attention span T_eff: the paged
+    serving steps score every query against the *full padded block table*
+    (``max_blocks_per_seq * block_size`` key positions, masked), not the
+    causal-average span — pass that capacity here when modelling a jitted
+    paged step.  Setting it also marks the build as a serving *step* view:
+    the encoder component is zeroed (it runs once at slot admission, never
+    inside prefill/decode).  ``moe_capacity`` switches MoE FLOPs to the
+    capacity-based dispatch actually executed (see _moe_flops_capacity).
+    """
     aparams = abstract_params(arch)
     B = batch
     S = 1 if mode == "decode" else seq_len
-    T_eff = seq_len if mode == "decode" else (seq_len + 1) / 2
+    if attn_span is not None:
+        T_eff = attn_span
+    else:
+        T_eff = seq_len if mode == "decode" else (seq_len + 1) / 2
+    moe_fn = _moe_flops_capacity if moe_capacity else _moe_flops
     D = arch.d_model
     act = B * S * D * BF16
     comps: list[Component] = []
@@ -203,9 +238,9 @@ def build_components(arch: ArchConfig, *, seq_len: int, batch: int,
             return (_attn_flops(arch, B, S, T_eff),
                     _mlp_flops(D, arch.d_ff, B, S, gated=gated))
         if kind == "moe_attn":
-            return (_attn_flops(arch, B, S, T_eff), _moe_flops(arch, B, S))
+            return (_attn_flops(arch, B, S, T_eff), moe_fn(arch, B, S))
         if kind == "mla":
-            return (_mla_flops(arch, B, S, T_eff), _moe_flops(arch, B, S))
+            return (_mla_flops(arch, B, S, T_eff), moe_fn(arch, B, S))
         if kind == "mla_dense":
             return (_mla_flops(arch, B, S, T_eff),
                     _mlp_flops(D, arch.d_ff, B, S, gated=gated))
@@ -240,7 +275,8 @@ def build_components(arch: ArchConfig, *, seq_len: int, batch: int,
         comps.append(Component(
             name="encoder", kind="enc_attn", count=arch.encoder.n_layers,
             params=enc_params / arch.encoder.n_layers, shared_params=False,
-            flops_fwd=(sum(kind_flops("enc_attn")) if mode != "decode" else 0.0),
+            flops_fwd=(0.0 if mode == "decode" or attn_span is not None
+                       else sum(kind_flops("enc_attn"))),
             act_bytes=B * arch.encoder.seq_len * D * BF16,
             n_model_allreduce=2, path=("encoder",)))
 

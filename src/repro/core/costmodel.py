@@ -232,3 +232,51 @@ class CostModel:
         return {"t_comp": t_comp, "t_comm": t_comm, "time": t_comp + t_comm,
                 "mem_per_device": mem,
                 "comm_fraction": t_comm / max(t_comp + t_comm, 1e-12)}
+
+
+# ---------------------------------------------------------------------------
+# serving-step predictions — the analytic side of the static-cost contract.
+# analysis/ircost.py extracts the same quantities from the lowered IR;
+# analysis/tracecheck.py (cost-drift analyzer) gates on their agreement and
+# the pair is committed to BENCH_static_costs.json.
+# ---------------------------------------------------------------------------
+
+# Relative FLOP tolerance between predict_serving_step and XLA's
+# cost_analysis() of the compiled step.  The analytic model counts matmul
+# FLOPs; XLA additionally counts elementwise work (norms, rope, softmax,
+# masking, sampler) and is free to rematerialize — agreement is structural,
+# not exact.  Calibrated over the registry archs by tests/test_tracecheck.py.
+SERVING_FLOPS_RTOL = 0.5
+
+# XLA's "bytes accessed" charges every operand of every fused op; the
+# analytic estimate counts params + cache pools + boundary activations once.
+# Only order-of-magnitude agreement is meaningful.
+SERVING_BYTES_RFACTOR = 16.0
+
+
+def predict_serving_step(arch, *, batch: int, new_tokens: int,
+                         table_len: int) -> dict:
+    """Analytic cost of ONE jitted paged serving step (forward only).
+
+    ``new_tokens`` is the tokens computed per row this step: the prefill
+    chunk size C for paged_prefill, 1 for paged_decode.  ``table_len`` is
+    the padded per-row attention capacity ``max_blocks_per_seq *
+    block_size`` — paged attention scores every query against that full
+    (masked) span, so it is the effective T for score/gather FLOPs AND the
+    per-row cache bytes touched.
+
+    Returns {"flops", "bytes"} — floats, whole batch, per step.
+    """
+    from repro.core.components import build_components
+
+    mode = "decode" if new_tokens == 1 else "prefill"
+    seq_len = table_len if mode == "decode" else new_tokens
+    comps = build_components(arch, seq_len=seq_len, batch=batch, mode=mode,
+                             attn_span=table_len, moe_capacity=True)
+    db = 4 if arch.param_dtype == "float32" else 2
+    flops = sum(c.total_flops_fwd for c in comps)
+    # kv_bytes/act_bytes are bf16-denominated in components.py; rescale.
+    cache = sum(c.kv_bytes * c.count for c in comps) * (db / PARAM_BYTES)
+    acts = sum(c.act_bytes * c.count for c in comps) * (db / PARAM_BYTES)
+    params = sum(c.total_params for c in comps) * db
+    return {"flops": float(flops), "bytes": float(params + cache + 2 * acts)}

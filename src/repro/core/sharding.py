@@ -365,7 +365,20 @@ def paged_cache_specs(arch: ArchConfig, assignment: dict[str, Strategy],
     over `model` when n_heads divides); whisper's wdec carries a paged
     self-attn pool plus a slot-state encoder-K/V pool; MLA's latent
     (c_kv, k_rope) pools are replicated — the rank axis is contracted inside
-    the absorbed-score einsums and is tiny by design (the point of MLA)."""
+    the absorbed-score einsums and is tiny by design (the point of MLA).
+
+    Specs are emitted in GSPMD's *canonical* form (trailing Nones stripped,
+    fully-replicated as P()): the pools are device_put with these specs at
+    engine init and then flow through the jitted steps, whose output
+    shardings come back canonicalized — a non-canonical initial spec hashes
+    differently and silently retraces every step on its second call
+    (caught by the tracecheck trace-cache analyzer)."""
+    def _canon(spec):
+        parts = tuple(spec)
+        while parts and parts[-1] is None:
+            parts = parts[:-1]
+        return P(*parts)
+
     specs = []
     for si, seg in enumerate(arch.pattern):
         seg_spec = {}
@@ -406,4 +419,4 @@ def paged_cache_specs(arch: ArchConfig, assignment: dict[str, Strategy],
                 continue
             seg_spec[f"b{bi}"] = {"k": pool, "v": pool}
         specs.append(seg_spec)
-    return specs
+    return jax.tree.map(_canon, specs)

@@ -268,7 +268,7 @@ def build_cell(arch_name: str, shape_name: str, *, multi_pod: bool,
                          jax.tree.map(lambda s: NamedSharding(mesh, s),
                                       opt_specs),
                          None)
-        fn = jax.jit(step, out_shardings=out_shardings, donate_argnums=(0, 1))
+        fn = ST.jit_step("train", step, out_shardings=out_shardings)
         args = (params_sds, opt_sds, batch)
         meta["remat"] = remat_policy
     else:
@@ -280,17 +280,15 @@ def build_cell(arch_name: str, shape_name: str, *, multi_pod: bool,
             pstep = ST.make_prefill_step(arch, act_sharding=act_ns)
             tok = jax.ShapeDtypeStruct((B, S), jnp.int32, sharding=tok_ns)
             if fe_sds is not None:
-                fn = jax.jit(lambda p, c, t, f: pstep(p, c, t, f),
-                             donate_argnums=(1,))
+                fn = ST.jit_step("prefill", lambda p, c, t, f: pstep(p, c, t, f))
                 args = (params_sds, cache_sds, tok, fe_sds)
             else:
-                fn = jax.jit(lambda p, c, t: pstep(p, c, t),
-                             donate_argnums=(1,))
+                fn = ST.jit_step("prefill", lambda p, c, t: pstep(p, c, t))
                 args = (params_sds, cache_sds, tok)
         else:  # decode
             dstep = ST.make_decode_step(arch, act_sharding=act_ns)
             tok = jax.ShapeDtypeStruct((B, 1), jnp.int32, sharding=tok_ns)
-            fn = jax.jit(dstep, donate_argnums=(1,))
+            fn = ST.jit_step("decode", dstep)
             args = (params_sds, cache_sds, tok)
     return fn, args, plan, meta, mesh
 

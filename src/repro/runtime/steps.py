@@ -11,6 +11,38 @@ from repro.models import transformer as T
 from repro.optim import optimizers as O
 
 
+# --- buffer-donation conventions -------------------------------------------
+# Single source of truth for which positional arguments of each step kind
+# are donated when jitted.  Every call site (serving/engine.py,
+# runtime/trainer.py, launch/dryrun.py) and the tracecheck donation
+# analyzer (analysis/tracecheck.py) read THIS table — a jit that donates
+# anything else is either leaking HBM (undonated cache doubles the pool)
+# or donating a buffer some caller still holds.
+#
+#   train:         (params, opt_state) are consumed and returned updated
+#   prefill/decode + paged/slot variants: the cache is the mutable carry;
+#                  params are read-only weights and must NOT be donated
+STEP_DONATION: dict[str, tuple[int, ...]] = {
+    "train": (0, 1),
+    "prefill": (1,),
+    "decode": (1,),
+    "paged_prefill": (1,),
+    "paged_decode": (1,),
+    "slot_admit": (1,),
+}
+
+
+def jit_step(kind: str, fn, **jit_kwargs):
+    """``jax.jit`` a step function with the donation convention for its
+    kind.  ``jit_kwargs`` pass through (out_shardings, static_argnums, ...);
+    a caller-supplied ``donate_argnums`` is rejected — the table is the
+    convention, not a default."""
+    if "donate_argnums" in jit_kwargs:
+        raise ValueError("jit_step owns donate_argnums; "
+                         f"use STEP_DONATION[{kind!r}]")
+    return jax.jit(fn, donate_argnums=STEP_DONATION[kind], **jit_kwargs)
+
+
 def make_loss_fn(arch: ArchConfig, *, impl="xla", remat="none",
                  act_sharding=None, mtp_weight: float = 0.3):
     def loss_fn(params, tokens, labels, frontend=None):

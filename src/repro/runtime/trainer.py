@@ -92,8 +92,8 @@ class Trainer:
         opt_sds = jax.eval_shape(lambda o: o, opt_state)
         ons = jax.tree.map(lambda s: NamedSharding(self.mesh, s),
                            self._opt_specs_fn(opt_sds))
-        self._jitted = jax.jit(self._step_fn, donate_argnums=(0, 1),
-                               out_shardings=(self._pns, ons, None))
+        self._jitted = ST.jit_step("train", self._step_fn,
+                                   out_shardings=(self._pns, ons, None))
 
     # ------------------------------------------------------------------
     def init_state(self, rng: Optional[jax.Array] = None):

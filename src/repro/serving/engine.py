@@ -256,14 +256,14 @@ class ContinuousBatchingEngine:
             params, jax.tree.map(lambda s: NamedSharding(mesh, s),
                                  self.plan.param_specs()))
         sampler = make_sampler(arch.vocab)
-        self._prefill = jax.jit(
-            ST.make_paged_prefill_step(arch, sampler=sampler),
-            donate_argnums=(1,))
-        self._decode = jax.jit(
-            ST.make_paged_decode_step(arch, sampler=sampler),
-            donate_argnums=(1,))
-        self._admit_slot_state = jax.jit(
-            ST.make_slot_admit_step(arch), donate_argnums=(1,)) \
+        # donation follows ST.STEP_DONATION (the cache carry is donated,
+        # params never are) — audited by analysis/tracecheck.py
+        self._prefill = ST.jit_step(
+            "paged_prefill", ST.make_paged_prefill_step(arch, sampler=sampler))
+        self._decode = ST.jit_step(
+            "paged_decode", ST.make_paged_decode_step(arch, sampler=sampler))
+        self._admit_slot_state = ST.jit_step(
+            "slot_admit", ST.make_slot_admit_step(arch)) \
             if self.cache.has_slot_state else None
         self.scheduler = scheduler or RequestScheduler()
         # the engine truncates every request to max_len, so the token budget
