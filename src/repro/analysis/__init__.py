@@ -14,6 +14,16 @@ Three complementary layers:
   * ``repro.analysis.sanitizer`` — a runtime paged-cache sanitizer that
     records allocation sites and cross-validates refcounts against live
     block tables and the prefix index every engine step.
+  * ``repro.analysis.schedcheck`` (+ ``statespace``) — exhaustive
+    bounded model checking of the serving control plane
+    (``python -m repro.analysis.schedcheck``): every interleaving of
+    submit/admit/prefill/decode/preempt events on the real scheduler
+    and paged-cache objects, with the sanitizer battery asserted at
+    every reachable state and minimized counterexample traces on
+    violation.
+
+``python -m repro.analysis`` runs all layers under one CLI with shared
+``--select``/``--format``/exit-code conventions.
 
 The tracecheck/sanitizer layers touch jax, so they are exported lazily:
 importing ``repro.analysis`` (as the CI lint job does, with no jax
@@ -23,7 +33,10 @@ import importlib
 
 __all__ = ["Finding", "Linter", "ModuleInfo", "emit_findings",
            "CacheSanitizer", "SanitizerError",
-           "run_analyzers", "collect_bench", "validate_bench", "ServeGeom"]
+           "run_analyzers", "collect_bench", "validate_bench", "ServeGeom",
+           "CheckConfig", "ControlPlaneModel", "SCHED_CONFIGS",
+           "run_config", "replay_trace",
+           "explore", "ExplorationResult", "Violation"]
 
 # everything is lazy: the sanitizer/tracecheck halves must not import jax
 # when only the linter is wanted, and eagerly importing lint here would
@@ -32,13 +45,23 @@ _EXPORTS = {"Finding": "lint", "Linter": "lint", "ModuleInfo": "lint",
             "emit_findings": "lint",
             "CacheSanitizer": "sanitizer", "SanitizerError": "sanitizer",
             "run_analyzers": "tracecheck", "collect_bench": "tracecheck",
-            "validate_bench": "tracecheck", "ServeGeom": "ircost"}
+            "validate_bench": "tracecheck", "ServeGeom": "ircost",
+            "CheckConfig": "schedcheck", "ControlPlaneModel": "schedcheck",
+            "run_config": "schedcheck", "replay_trace": "schedcheck",
+            "explore": "statespace", "ExplorationResult": "statespace",
+            "Violation": "statespace"}
+# schedcheck's config dict is exported under a package-level alias (its
+# in-module name, CONFIGS, is too generic at this scope)
+_ALIASES = {"SCHED_CONFIGS": ("schedcheck", "CONFIGS")}
 
 
 def __getattr__(name):
-    submodule = _EXPORTS.get(name)
-    if submodule is None:
+    if name in _ALIASES:
+        submodule, attr = _ALIASES[name]
+    elif name in _EXPORTS:
+        submodule, attr = _EXPORTS[name], name
+    else:
         raise AttributeError(f"module {__name__!r} has no attribute "
                              f"{name!r}")
     return getattr(
-        importlib.import_module(f"repro.analysis.{submodule}"), name)
+        importlib.import_module(f"repro.analysis.{submodule}"), attr)

@@ -799,6 +799,39 @@ class ClockInjection(Rule):
         return findings
 
 
+class NoBareAssert(Rule):
+    """Runtime invariant checks in serving/ must be explicit raises.
+
+    ``assert`` disappears under ``python -O`` — a production deployment
+    running optimized bytecode silently loses the check, and the failure
+    it guarded (a leaked block, an out-of-sync admission) resurfaces
+    later as corruption with no pointer back to the violated invariant.
+    Two real instances motivated this: ``BlockAllocator``'s minimum-pool
+    assert and the engine's reserve-after-can_fit assert, both now
+    ``raise`` with diagnostic messages.  Schedcheck compounds the
+    stakes: its safety battery drives the *real* implementation objects,
+    so an invariant demoted to ``assert`` would also vanish from the
+    model checker's view under -O.
+
+    Scope is runtime serving/ code only — tests and analysis tooling
+    keep ``assert`` (pytest rewrites it; checkers run unoptimized)."""
+    name = "no-bare-assert"
+    description = ("serving/ runtime invariants must `raise`, not "
+                   "`assert` (asserts vanish under python -O)")
+
+    def check(self, module: ModuleInfo, ctx: LintContext) -> list[Finding]:
+        if not module.in_serving:
+            return []
+        return [self.finding(
+                    module, node,
+                    "bare `assert` in serving/ runtime code — raise an "
+                    "explicit exception instead (asserts are stripped "
+                    "under python -O, silently disabling the invariant)")
+                for node in ast.walk(module.tree)
+                if isinstance(node, ast.Assert)]
+
+
 def all_rules() -> list[Rule]:
     return [JitHostSync(), JitRecompileHazard(), PrngDiscipline(),
-            RefcountPairing(), AtomicWrite(), ClockInjection()]
+            RefcountPairing(), AtomicWrite(), ClockInjection(),
+            NoBareAssert()]

@@ -449,7 +449,10 @@ class ContinuousBatchingEngine:
             else:
                 n_cached = self.cache.assign_prefix(st.id, ctx)
             ok = self.cache.reserve(st.id, len(ctx))
-            assert ok, "can_fit_request passed but reserve failed"
+            if not ok:
+                raise RuntimeError(
+                    f"request {st.id}: can_fit_request passed but reserve "
+                    f"failed — admission check out of sync with allocator")
             slot.req, slot.state = st, "prefill"
             slot.pos, slot.prefill_pos = n_cached, n_cached
             admitted += 1

@@ -65,7 +65,8 @@ class BlockAllocator:
     """
 
     def __init__(self, num_blocks: int):
-        assert num_blocks >= 2, "need at least the null block + one real block"
+        if num_blocks < 2:
+            raise ValueError("need at least the null block + one real block")
         self.num_blocks = num_blocks
         self._free = list(range(num_blocks - 1, 0, -1))   # pop() -> low ids first
         self._ref: dict[int, int] = {}                    # block -> refcount
@@ -167,6 +168,26 @@ class PagedKVCache:
             ns = jax.tree.map(lambda s: NamedSharding(mesh, s), specs)
             pools = jax.device_put(pools, ns)
         self.pools = pools
+        self._init_host_state()
+
+    @classmethod
+    def host_only(cls, cfg: PagedCacheConfig) -> "PagedKVCache":
+        """Construct the host-side bookkeeping alone: allocator, block
+        tables, prefix index, LRU — no device pools, no arch, no jax.
+        This is the exact object the engine's control plane mutates, which
+        is what analysis/schedcheck.py model-checks: the allocator /
+        table / index / LRU transition logic is the *real* code, only the
+        device pools (pure data, irrelevant to control flow) are absent.
+        Accessing ``pools`` / ``pool_bytes`` / ``arch`` on a host-only
+        cache raises."""
+        self = cls.__new__(cls)
+        self.arch, self.cfg = None, cfg
+        self.pools = None
+        self._init_host_state()
+        return self
+
+    def _init_host_state(self) -> None:
+        cfg = self.cfg
         self.allocator = BlockAllocator(cfg.num_blocks)
         self.tables: dict[int, list[int]] = {}   # request id -> physical blocks
         # -- prefix-sharing state (inert unless cfg.share_prefix) -----------
@@ -369,6 +390,78 @@ class PagedKVCache:
         the pool mostly evictable."""
         usable = self.cfg.num_blocks - 1
         return (self.allocator.num_used - len(self._lru)) / max(usable, 1)
+
+    # -- snapshot (ROADMAP item 4 groundwork; schedcheck canonicalizes
+    #    exactly this structure) --------------------------------------------
+    @staticmethod
+    def _flat_key(key: Optional[tuple]) -> tuple:
+        """Chain key -> the flat token prefix it commits to.  The nested
+        (prev, chunk) form is an incremental-hashing optimization; the flat
+        prefix is the canonical, serializable equivalent."""
+        out: list[int] = []
+        while key is not None:
+            key, chunk = key
+            out[:0] = chunk
+        return tuple(out)
+
+    def _nest_key(self, flat) -> Optional[tuple]:
+        """Inverse of ``_flat_key``: fold a flat token prefix back into the
+        (prev, chunk) chain form, one chunk per block_size tokens."""
+        bs = self.cfg.block_size
+        prev: Optional[tuple] = None
+        for i in range(0, len(flat), bs):
+            prev = (prev, tuple(int(t) for t in flat[i:i + bs]))
+        return prev
+
+    def host_state_dict(self) -> dict:
+        """JSON-able snapshot of every host-side structure: allocator
+        free list (order is behavioral — pop order decides physical block
+        reuse), refcounts, block tables, prefix index (as flat token
+        prefixes), LRU residency order, per-request commit cursors, and
+        the prefix counters.  Device pools are *not* included — KV bytes
+        are recomputable from tokens (recompute-preemption relies on the
+        same property)."""
+        alloc = self.allocator
+        return {
+            "free_list": list(alloc._free),
+            "refcounts": [[b, alloc._ref[b]] for b in sorted(alloc._ref)],
+            "tables": [[rid, list(bs)]
+                       for rid, bs in sorted(self.tables.items())],
+            "prefix_index": [[list(self._flat_key(k)), b]
+                             for k, b in sorted(self._hash_to_block.items(),
+                                                key=lambda kv: kv[1])],
+            "lru": list(self._lru),
+            "committed": [[rid, n, None if key is None
+                           else list(self._flat_key(key))]
+                          for rid, (n, key) in sorted(self._committed.items())],
+            "counters": {"prefix_hit_tokens": self.prefix_hit_tokens,
+                         "prefix_lookup_tokens": self.prefix_lookup_tokens,
+                         "prefix_evictions": self.prefix_evictions},
+        }
+
+    def load_host_state_dict(self, state: dict) -> None:
+        """Restore from ``host_state_dict()`` output (same cfg geometry).
+        Coerces ints so npz/JSON round-trips (which widen to int64 / lists)
+        restore bit-identical host state."""
+        alloc = self.allocator
+        alloc._free = [int(b) for b in state["free_list"]]
+        alloc._ref = {int(b): int(rc) for b, rc in state["refcounts"]}
+        self.tables = {int(rid): [int(b) for b in bs]
+                       for rid, bs in state["tables"]}
+        self._hash_to_block = {}
+        self._block_to_hash = {}
+        for flat, b in state["prefix_index"]:
+            key = self._nest_key(flat)
+            self._hash_to_block[key] = int(b)
+            self._block_to_hash[int(b)] = key
+        self._lru = OrderedDict((int(b), None) for b in state["lru"])
+        self._committed = {
+            int(rid): (int(n), None if flat is None else self._nest_key(flat))
+            for rid, n, flat in state["committed"]}
+        c = state["counters"]
+        self.prefix_hit_tokens = int(c["prefix_hit_tokens"])
+        self.prefix_lookup_tokens = int(c["prefix_lookup_tokens"])
+        self.prefix_evictions = int(c["prefix_evictions"])
 
     # -- device-side views --------------------------------------------------
     def table_row(self, rid: Optional[int]) -> np.ndarray:

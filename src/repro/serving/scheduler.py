@@ -36,7 +36,6 @@ cache, is the bottleneck.
 from __future__ import annotations
 
 import heapq
-import itertools
 from typing import Optional
 
 
@@ -46,7 +45,9 @@ class RequestScheduler:
         self.max_tokens_in_flight = max_tokens_in_flight
         self.footprint_cap = footprint_cap     # engine sets this to max_len
         self._heap: list = []                  # (priority, seq, Request)
-        self._seq = itertools.count()
+        # plain int, not itertools.count: snapshotable (state_dict) and
+        # bounded by #unique submits (preemption re-enqueue keeps its seq)
+        self._next_seq = 0
         self._in_flight_tokens = 0
         # live telemetry counters (ServingMetrics holds a reference)
         self.stats: dict[str, int] = {"submitted": 0, "admitted": 0,
@@ -72,7 +73,8 @@ class RequestScheduler:
 
     def _enqueue(self, req) -> None:
         if getattr(req, "_sched_seq", None) is None:
-            req._sched_seq = next(self._seq)   # preserved across preemption
+            req._sched_seq = self._next_seq    # preserved across preemption
+            self._next_seq += 1
         heapq.heappush(self._heap, (req.priority, req._sched_seq, req))
 
     @property
@@ -124,6 +126,40 @@ class RequestScheduler:
         self._in_flight_tokens -= (self._footprint(req) if charged is None
                                    else charged)
         req._charged_footprint = None
+
+    # -- snapshot (ROADMAP item 4 groundwork; schedcheck canonicalizes
+    #    exactly this structure) ---------------------------------------------
+    def state_dict(self) -> dict:
+        """JSON-able snapshot of the scheduler's control state.  Queued
+        requests are recorded by id (the engine owns the request objects
+        and snapshots them separately); ``load_state_dict`` re-marries
+        them.  The heap is stored in sorted (priority, seq) order — a
+        canonical form, since heap layout is an implementation detail."""
+        return {
+            "max_tokens_in_flight": self.max_tokens_in_flight,
+            "footprint_cap": self.footprint_cap,
+            "next_seq": self._next_seq,
+            "in_flight_tokens": self._in_flight_tokens,
+            "queue": [[prio, seq, req.id]
+                      for prio, seq, req in sorted(
+                          self._heap, key=lambda e: e[:2])],
+            "stats": dict(self.stats),
+        }
+
+    def load_state_dict(self, state: dict, requests_by_id: dict) -> None:
+        """Restore from ``state_dict()`` output.  ``requests_by_id`` maps
+        request id -> live request object for every queued entry."""
+        self.max_tokens_in_flight = state["max_tokens_in_flight"]
+        self.footprint_cap = state["footprint_cap"]
+        self._next_seq = int(state["next_seq"])
+        self._in_flight_tokens = int(state["in_flight_tokens"])
+        self._heap = []
+        for prio, seq, rid in state["queue"]:
+            req = requests_by_id[rid]
+            req._sched_seq = int(seq)
+            self._heap.append((int(prio), int(seq), req))
+        heapq.heapify(self._heap)
+        self.stats.update({k: int(v) for k, v in state["stats"].items()})
 
     # -- preemption ---------------------------------------------------------
     def pick_preemption_victim(self, running: list):
