@@ -55,6 +55,7 @@ from __future__ import annotations
 
 import argparse
 import collections
+import sys
 
 import jax
 import numpy as np
@@ -196,14 +197,47 @@ def main():
         prefill_chunk=args.prefill_chunk, share_prefix=args.share_prefix,
         metrics=ServingMetrics(window_s=args.metrics_window),
         tracer=tracer, snapshot=snapshot, sanitizer=sanitizer)
-    outs = engine.generate([
-        Request(id=i, prompt=p, max_new_tokens=args.max_new,
-                sampling=SamplingParams(temperature=args.temperature,
-                                        top_k=args.top_k, top_p=args.top_p,
-                                        seed=args.seed + i,
-                                        stop_token_ids=stop_ids,
-                                        logprobs=args.logprobs))
-        for i, p in enumerate(prompts)])
+
+    def flush_artifacts(out=sys.stdout) -> None:
+        """Write every requested artifact through its atomic path.  One
+        function for BOTH exits: the success epilogue below and the
+        crash path — an engine raise mid-drain must still leave complete,
+        loadable trace/metrics/prometheus files (what it captured up to
+        the failure), never a stranded half-written snapshot cycle."""
+        if args.metrics_out:
+            engine.metrics.write(args.metrics_out, engine="continuous",
+                                 arch=arch.name)
+            print(f"metrics -> {args.metrics_out}", file=out)
+        if snapshot is not None:
+            snapshot.write(engine.metrics)   # final flush past the cadence
+            print(f"snapshots -> {snapshot.path} "
+                  f"({snapshot.n_snapshots} lines)", file=out)
+        if tracer is not None:
+            tracer.write(args.trace_out)
+            print(f"trace -> {args.trace_out} (open in ui.perfetto.dev)",
+                  file=out)
+        if args.prom_out:
+            atomic_write_text(args.prom_out, prometheus_text(engine.metrics))
+            print(f"prometheus -> {args.prom_out}", file=out)
+
+    try:
+        outs = engine.generate([
+            Request(id=i, prompt=p, max_new_tokens=args.max_new,
+                    sampling=SamplingParams(temperature=args.temperature,
+                                            top_k=args.top_k,
+                                            top_p=args.top_p,
+                                            seed=args.seed + i,
+                                            stop_token_ids=stop_ids,
+                                            logprobs=args.logprobs))
+            for i, p in enumerate(prompts)])
+    except Exception as e:
+        print(f"engine failed mid-drain: {type(e).__name__}: {e}",
+              file=sys.stderr)
+        try:
+            flush_artifacts(out=sys.stderr)
+        except Exception as flush_err:       # the crash exit must survive
+            print(f"artifact flush failed: {flush_err}", file=sys.stderr)
+        raise SystemExit(1)
     s = engine.metrics.summary()
     reasons = collections.Counter(o.finish_reason for o in outs)
     share = (f", prefix hit rate {s['prefix_hit_rate']:.2f}"
@@ -230,19 +264,7 @@ def main():
               if o.logprobs else "")
         print(f"  req {o.request_id} [{o.finish_reason}] "
               f"{o.token_ids}{lp}")
-    if args.metrics_out:
-        engine.metrics.write(args.metrics_out, engine="continuous",
-                             arch=arch.name)
-        print(f"metrics -> {args.metrics_out}")
-    if snapshot is not None:
-        snapshot.write(engine.metrics)      # final flush past the cadence
-        print(f"snapshots -> {snapshot.path} ({snapshot.n_snapshots} lines)")
-    if tracer is not None:
-        tracer.write(args.trace_out)
-        print(f"trace -> {args.trace_out} (open in ui.perfetto.dev)")
-    if args.prom_out:
-        atomic_write_text(args.prom_out, prometheus_text(engine.metrics))
-        print(f"prometheus -> {args.prom_out}")
+    flush_artifacts()
     if sanitizer is not None:
         # reaching this line means every per-step and drain check passed
         print(f"sanitizer: clean ({sanitizer.report()})")

@@ -1,0 +1,126 @@
+"""Cluster serving launcher: N engine replica workers + prefix-affinity
+router + HTTP/SSE frontend.
+
+    PYTHONPATH=src python -m repro.launch.serve_cluster \
+        --arch qwen3-8b --smoke --replicas 2 --http-port 8080
+
+Boot sequence: bind the worker port (ephemeral unless --worker-port),
+spawn the replicas (subprocess each, per-worker XLA_FLAGS mesh slice),
+accept their connections + ready handshakes, then start the router poll
+loop on a background thread and the HTTP server on this one.  Prints
+``serving on http://...`` and the worker pids once ready — the CI
+cluster job scrapes both (the pids for the no-orphans check).
+
+Shutdown: SIGTERM/SIGINT trips one event; the HTTP server stops, the
+router broadcasts ``shutdown``, the launcher reaps every worker
+(terminate -> kill escalation for stragglers) and the process exits 0.
+A worker dying early fails the boot loudly instead of hanging accept.
+
+The router/frontend process never imports jax — only the worker
+subprocesses pay device-runtime startup.
+"""
+from __future__ import annotations
+
+import argparse
+import signal
+import sys
+import threading
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--replicas", type=int, default=2)
+    ap.add_argument("--http-host", default="127.0.0.1")
+    ap.add_argument("--http-port", type=int, default=0,
+                    help="frontend port (0 = ephemeral, printed at boot)")
+    ap.add_argument("--worker-port", type=int, default=0,
+                    help="router's worker-facing port (0 = ephemeral)")
+    ap.add_argument("--devices-per-worker", type=int, default=1,
+                    help="forced host-platform device count per worker "
+                         "(each replica's own mesh slice)")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--num-blocks", type=int, default=None)
+    ap.add_argument("--prefill-chunk", type=int, default=64)
+    ap.add_argument("--share-prefix", action="store_true")
+    ap.add_argument("--metrics-window", type=float, default=10.0)
+    ap.add_argument("--heartbeat-interval", type=float, default=1.0)
+    ap.add_argument("--heartbeat-timeout", type=float, default=30.0)
+    ap.add_argument("--boot-timeout", type=float, default=300.0,
+                    help="seconds to wait for every worker to connect "
+                         "(first run pays jit compilation)")
+    args = ap.parse_args()
+    if args.replicas < 1:
+        ap.error("--replicas must be >= 1")
+
+    from repro.serving.cluster.frontend import ClusterHTTPServer
+    from repro.serving.cluster.launcher import (WorkerProcesses,
+                                                accept_workers,
+                                                listen_socket)
+    from repro.serving.cluster.router import ReplicaHandle, Router
+
+    srv = listen_socket(port=args.worker_port)
+    host, port = srv.getsockname()[:2]
+    procs = WorkerProcesses.spawn(
+        args.replicas, connect=f"{host}:{port}", arch=args.arch,
+        devices_per_worker=args.devices_per_worker, smoke=args.smoke,
+        slots=args.slots, max_len=args.max_len, block_size=args.block_size,
+        num_blocks=args.num_blocks, prefill_chunk=args.prefill_chunk,
+        share_prefix=args.share_prefix,
+        metrics_window=args.metrics_window)
+    try:
+        conns = accept_workers(srv, args.replicas,
+                               timeout=args.boot_timeout, procs=procs)
+    except Exception:
+        procs.stop(grace=2.0)
+        raise
+    handles = [ReplicaHandle(replica=rid, transport=stream,
+                             pid=ready.get("pid"),
+                             max_len=ready.get("max_len", args.max_len))
+               for rid, (stream, ready) in sorted(conns.items())]
+    router = Router(handles, block_size=args.block_size,
+                    heartbeat_interval=args.heartbeat_interval,
+                    heartbeat_timeout=args.heartbeat_timeout)
+    http = ClusterHTTPServer(router, host=args.http_host,
+                             port=args.http_port)
+
+    stop = threading.Event()
+
+    def on_signal(signum, frame):
+        stop.set()
+        # unblock serve_forever from the signal handler's thread safely
+        threading.Thread(target=http.shutdown, daemon=True).start()
+
+    signal.signal(signal.SIGTERM, on_signal)
+    signal.signal(signal.SIGINT, on_signal)
+
+    def poll_loop():
+        while not stop.is_set():
+            router.poll(0.05)
+
+    poller = threading.Thread(target=poll_loop, daemon=True,
+                              name="router-poll")
+    poller.start()
+
+    print(f"serving on {http.url} "
+          f"({args.replicas} replica(s), arch {args.arch})", flush=True)
+    print(f"worker pids: {' '.join(str(p) for p in procs.pids)}",
+          flush=True)
+    try:
+        http.serve_forever(poll_interval=0.2)
+    finally:
+        stop.set()
+        poller.join(timeout=5.0)
+        router.broadcast_shutdown()
+        codes = procs.stop(grace=10.0)
+        http.server_close()
+        srv.close()
+        print(f"workers exited with {codes}", flush=True)
+    sys.exit(0)
+
+
+if __name__ == "__main__":
+    main()

@@ -79,14 +79,32 @@ Layers (bottom up):
                     shared prompt prefix and starts prefill at the matched
                     boundary.
 
+  prefix_hash.py    the content-hash chain-key scheme (shared with the
+                    cluster router's prefix-affinity index — one function,
+                    two consumers, so router keys == cache keys by
+                    construction).
+  detok.py          the detokenization boundary: token-id -> text pieces
+                    plus incremental stop-*string* matching with buffered
+                    emission (used by the cluster HTTP/SSE frontend; the
+                    engine itself stays token-level).
+  cluster/          the multi-process serving cluster: engine replica
+                    workers behind an NDJSON wire protocol, the
+                    prefix-affinity router with replica health, and the
+                    stdlib HTTP/SSE frontend (launched via
+                    repro.launch.serve_cluster).  Imported explicitly as
+                    ``repro.serving.cluster`` — not re-exported here.
+
 The wave-synchronized Server was retired: runtime/server.py is now a thin
 deprecation shim that delegates to this engine (greedy parity with the
 pre-shim wave implementation is pinned in tests/goldens_serving.json).
 """
 from repro.serving.cache_manager import (PAGEABLE_KINDS, SLOT_STATE_KINDS,
                                          UnifiedCacheManager)
+from repro.serving.detok import (Detokenizer, StopStringMatcher,
+                                 default_detokenizer)
 from repro.serving.engine import (ContinuousBatchingEngine, Request,
                                   RequestOutput)
+from repro.serving.prefix_hash import chain_keys
 from repro.serving.export import (SnapshotWriter, atomic_write_text,
                                   prometheus_text)
 from repro.serving.metrics import ServingMetrics
@@ -103,4 +121,6 @@ __all__ = ["ContinuousBatchingEngine", "Request", "RequestOutput",
            "PAGEABLE_KINDS", "SLOT_STATE_KINDS",
            "Counter", "Gauge", "LogHistogram", "SlidingWindow", "Telemetry",
            "ChromeTracer", "validate_chrome_trace",
-           "SnapshotWriter", "atomic_write_text", "prometheus_text"]
+           "SnapshotWriter", "atomic_write_text", "prometheus_text",
+           "Detokenizer", "StopStringMatcher", "default_detokenizer",
+           "chain_keys"]

@@ -1,0 +1,41 @@
+"""Multi-process serving cluster: engine replica workers, a
+prefix-affinity router, and an HTTP/SSE streaming frontend.
+
+Topology (see docs/SERVING.md for the full picture):
+
+    client --HTTP/SSE--> frontend --(in-proc)--> Router
+                                       | NDJSON over localhost TCP
+                            +----------+----------+
+                            v                     v
+                      worker 0 (subprocess)  worker 1 (subprocess)
+                      ContinuousBatchingEngine each, own mesh slice
+
+Replicas are pure data-parallel: workers never communicate with each
+other, so single-machine CI needs no collectives.  Determinism
+(``fold_in(seed, position)`` sampling keys, identical ``PRNGKey(0)``
+params) makes any replica produce bit-identical tokens for a request —
+cluster-vs-single-process parity is a hard assertion.
+
+Import layering: this package root, ``protocol``, ``affinity``,
+``router`` and ``frontend`` use no jax themselves — the router/frontend
+process pays the parent package's jax *import* (Python always executes
+``repro.serving.__init__``) but never builds a mesh, loads params or
+compiles a step; only ``worker`` (lazily, inside functions) and the
+subprocesses it runs touch devices.
+"""
+from repro.serving.cluster.protocol import (ClusterError, ConnectionClosed,
+                                            ProtocolError, ReplicaDeadError,
+                                            SubmitRejectedError,
+                                            InProcTransport, MessageStream,
+                                            encode_message)
+from repro.serving.cluster.affinity import PrefixAffinity
+from repro.serving.cluster.router import ReplicaHandle, Router
+from repro.serving.cluster.launcher import WorkerProcesses
+from repro.serving.cluster.frontend import ClusterHTTPServer
+
+__all__ = [
+    "ClusterError", "ConnectionClosed", "ProtocolError", "ReplicaDeadError",
+    "SubmitRejectedError", "InProcTransport", "MessageStream",
+    "encode_message", "PrefixAffinity", "ReplicaHandle", "Router",
+    "WorkerProcesses", "ClusterHTTPServer",
+]

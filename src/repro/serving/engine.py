@@ -416,6 +416,52 @@ class ContinuousBatchingEngine:
                                         n_generated=len(st.out_tokens))
         slot.req, slot.state, slot.pos, slot.prefill_pos = None, "idle", 0, 0
 
+    def cancel(self, rid: int, reason: str = "cancelled") -> bool:
+        """Abort a queued or running request; True iff ``rid`` was in
+        flight.  The request finishes with ``finish_reason=reason`` and
+        whatever tokens it had produced — the cluster frontend uses this
+        when a stop *string* matches at the detokenized boundary (the
+        engine stays token-level; see serving/detok.py) and when a client
+        disconnects mid-stream.  Running requests release their cache
+        blocks and budget charge through the normal ``_finish`` path;
+        queued requests hold neither (budget is charged at admission), so
+        cancellation there is queue surgery plus the same lifecycle
+        bookkeeping — either way metrics/trace/completed stay consistent
+        and the drain sanitizer sees a clean engine."""
+        st = self._states.get(rid)
+        if st is None:
+            return False
+        for slot in self.slots:
+            if slot.busy and slot.req is st:
+                self._finish(slot, reason)
+                return True
+        removed = self.scheduler.remove(st)
+        if not removed:
+            raise RuntimeError(f"request {rid} tracked but neither running "
+                               f"nor queued — lifecycle invariant broken")
+        del self._states[rid]
+        t = self._clock()
+        self.metrics.on_finish(rid, len(st.out_tokens), t, reason=reason)
+        if self.tracer is not None:
+            self.tracer.request_end(rid, t, finish_reason=reason,
+                                    n_tokens=len(st.out_tokens))
+        rep = self.metrics.request_report(rid)
+        self.completed.append(RequestOutput(
+            request_id=rid, token_ids=list(st.out_tokens),
+            finish_reason=reason, prompt_len=len(st.req.prompt),
+            logprobs=None if st.logprobs is None else list(st.logprobs),
+            ttft_s=rep["ttft_s"], tpot_s=rep["tpot_s"]))
+        return True
+
+    def outstanding_tokens(self) -> int:
+        """Worst-case tokens still to be generated across every queued and
+        running request — the load estimate a cluster router balances on
+        (exported per worker through the stats protocol)."""
+        return sum(
+            max(self._target_total(st) - len(st.req.prompt)
+                - len(st.out_tokens), 0)
+            for st in self._states.values())
+
     # -- phase 1: admission --------------------------------------------
     def _admit(self) -> int:
         admitted = 0

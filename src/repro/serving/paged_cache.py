@@ -43,6 +43,7 @@ from jax.sharding import NamedSharding
 
 from repro.configs.base import ArchConfig
 from repro.models import transformer as T
+from repro.serving.prefix_hash import chain_keys
 
 NULL_BLOCK = 0
 
@@ -206,19 +207,9 @@ class PagedKVCache:
         self.prefix_lookup_tokens = 0
         self.prefix_evictions = 0
 
-    # -- prefix index -------------------------------------------------------
-    def _chain_keys(self, tokens, start: int, n_blocks: int,
-                    prev: Optional[tuple]) -> list[tuple]:
-        """Chain keys for full blocks [start, n_blocks), extending ``prev``
-        (the key of block start-1, None at the chain head)."""
-        bs = self.cfg.block_size
-        keys = []
-        for i in range(start, n_blocks):
-            chunk = tuple(int(t) for t in tokens[i * bs:(i + 1) * bs])
-            prev = (prev, chunk)
-            keys.append(prev)
-        return keys
-
+    # -- prefix index (keys from serving/prefix_hash.py — the cluster
+    #    router's affinity index uses the same scheme, which is what lets
+    #    it predict which replica holds a prompt's blocks) ------------------
     def match_prefix(self, tokens) -> list[int]:
         """Longest chain of cached full blocks covering a prefix of
         ``tokens`` — capped at len(tokens)-1 so at least one token is left
@@ -228,11 +219,9 @@ class PagedKVCache:
             return []
         bs = self.cfg.block_size
         limit = max(len(tokens) - 1, 0) // bs
-        blocks, prev = [], None
-        for i in range(limit):
-            chunk = tuple(int(t) for t in tokens[i * bs:(i + 1) * bs])
-            prev = (prev, chunk)
-            b = self._hash_to_block.get(prev)
+        blocks = []
+        for key in chain_keys(tokens, bs, 0, limit):
+            b = self._hash_to_block.get(key)
             if b is None:
                 break
             blocks.append(b)
@@ -277,7 +266,7 @@ class PagedKVCache:
         start, prev = self._committed.get(rid, (0, None))
         if n_full <= start:
             return
-        keys = self._chain_keys(tokens, start, n_full, prev)
+        keys = chain_keys(tokens, self.cfg.block_size, start, n_full, prev)
         for i, key in zip(range(start, n_full), keys):
             b = table[i]
             if b in self._block_to_hash or key in self._hash_to_block:

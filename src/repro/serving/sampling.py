@@ -73,6 +73,14 @@ class SamplingParams:
                    entry of ``RequestOutput.token_ids`` — it was genuinely
                    sampled, and keeping it makes recompute-preemption and
                    prefix-cache commits see the true context.
+    stop           stop *strings*, matched over decoded text.  The engine
+                   itself never looks at these — it has no detokenizer and
+                   stays token-level — the frontend boundary
+                   (serving/detok.StopStringMatcher, used by the cluster
+                   HTTP/SSE server) matches them incrementally and cancels
+                   the request, trimming the matched text.  Carried here so
+                   one params object describes the whole request and rides
+                   the wire protocol unchanged.
     logprobs       when True the ``RequestOutput`` carries one logprob per
                    generated token, under the distribution it was actually
                    sampled from (post-mask, post-temperature; the raw
@@ -83,6 +91,7 @@ class SamplingParams:
     top_p: float = 1.0
     seed: Optional[int] = None
     stop_token_ids: tuple = ()
+    stop: tuple = ()
     logprobs: bool = False
 
     @property
@@ -122,6 +131,10 @@ class SamplingParams:
             if s < 0 or (vocab is not None and s >= vocab):
                 raise ValueError(f"stop token id {int(s)} outside the "
                                  f"vocabulary [0, {vocab})")
+        for s in self.stop:
+            if not isinstance(s, str) or not s:
+                raise ValueError(f"stop strings must be non-empty strings "
+                                 f"(got {s!r})")
 
 
 GREEDY = SamplingParams()

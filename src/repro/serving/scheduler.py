@@ -77,6 +77,17 @@ class RequestScheduler:
             self._next_seq += 1
         heapq.heappush(self._heap, (req.priority, req._sched_seq, req))
 
+    def remove(self, req) -> bool:
+        """Drop a *queued* request (cancellation before admission).  True
+        iff it was in the queue.  Queued requests hold no budget charge —
+        that happens at admission — so removal is pure queue surgery."""
+        kept = [e for e in self._heap if e[2] is not req]
+        if len(kept) == len(self._heap):
+            return False
+        self._heap = kept
+        heapq.heapify(self._heap)
+        return True
+
     @property
     def queue_depth(self) -> int:
         return len(self._heap)

@@ -312,6 +312,42 @@ def test_module_info_serving_scope_detection():
     assert not ModuleInfo("src/repro/runtime/x.py", "").in_serving
 
 
+def test_serving_scope_covers_cluster_subpackage():
+    """The cluster subsystem sits under serving/, so every serving-scoped
+    rule applies to it automatically — no per-rule path lists to keep in
+    sync as the package grows."""
+    assert ModuleInfo("src/repro/serving/cluster/router.py", "").in_serving
+    assert ModuleInfo("src/repro/serving/cluster/worker.py", "").in_serving
+
+
+def test_cluster_paths_hit_serving_scoped_rules():
+    clocky = "import time\n\ndef f():\n    return time.monotonic()\n"
+    assert rules_hit("src/repro/serving/cluster/router.py", clocky,
+                     "clock-injection") == {"clock-injection"}
+    asserty = "def f(x):\n    assert x, 'no'\n    return x\n"
+    assert rules_hit("src/repro/serving/cluster/frontend.py", asserty,
+                     "no-bare-assert") == {"no-bare-assert"}
+    writey = ("def dump(path, text):\n"
+              "    with open(path, 'w') as f:\n"
+              "        f.write(text)\n")
+    assert rules_hit("src/repro/serving/cluster/worker.py", writey,
+                     "atomic-write") == {"atomic-write"}
+
+
+def test_cluster_clock_pragma_suppresses_default_arg_line():
+    """The Router takes ``clock=time.monotonic`` as an injectable default —
+    the sanctioned pattern — and suppresses the banned-name finding with
+    the per-line pragma, exactly as serving/metrics.py does."""
+    src = ("import time\n\n\n"
+           "class Router:\n"
+           "    def __init__(self, handles, *,\n"
+           "                 clock=time.monotonic):"
+           "  # reprolint: disable=clock-injection\n"
+           "        self._clock = clock\n")
+    assert not findings_for("src/repro/serving/cluster/router.py", src,
+                            "clock-injection")
+
+
 def test_no_bare_assert_bad():
     src = """
 def reserve(self, n):

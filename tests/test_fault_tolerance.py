@@ -53,17 +53,24 @@ def test_crash_restart_reaches_same_state(tmp_path):
 
 
 def test_elastic_resize_preserves_state():
-    """Trainer.resize re-plans on a new mesh and reshards live state; the
-    model function is unchanged so the next loss continues the trajectory."""
+    """Trainer.resize re-plans on a new mesh and reshards live state; a
+    same-size resize must be invisible to the trajectory, so the five
+    post-resize losses match an uninterrupted 10-step run exactly."""
     mesh = make_host_mesh()
+    tr0 = Trainer(TINY, SHAPE, mesh, TrainConfig(lr=1e-3, total_steps=40))
+    p0, o0 = tr0.init_state()
+    p0, o0, href = tr0.train(p0, o0, SyntheticLM(TINY.vocab, 32, 8), steps=10)
+
     tr = Trainer(TINY, SHAPE, mesh, TrainConfig(lr=1e-3, total_steps=40))
     p, o = tr.init_state()
     data = SyntheticLM(TINY.vocab, 32, 8)
-    p, o, h1 = tr.train(p, o, data, steps=5)
+    p, o, _ = tr.train(p, o, data, steps=5)
     p, o = tr.resize(make_host_mesh(), p, o)   # same size, full reshard path
     p, o, h2 = tr.train(p, o, data, steps=5)
     assert np.isfinite([m["loss"] for m in h2]).all()
-    assert h2[-1]["loss"] < h1[0]["loss"]
+    np.testing.assert_allclose([m["loss"] for m in h2],
+                               [m["loss"] for m in href[5:]],
+                               rtol=0, atol=0)
 
 
 def test_straggler_reassignment_preserves_coverage():
