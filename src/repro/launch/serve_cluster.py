@@ -25,6 +25,7 @@ import argparse
 import signal
 import sys
 import threading
+import traceback
 
 
 def main():
@@ -97,9 +98,23 @@ def main():
     signal.signal(signal.SIGTERM, on_signal)
     signal.signal(signal.SIGINT, on_signal)
 
+    # Router.poll already contains per-replica failures (ProtocolError /
+    # ConnectionClosed -> mark dead); anything that still escapes is a
+    # router bug, and the one poll thread dying silently would leave the
+    # HTTP server accepting requests that can never finish.  Fail the
+    # whole process loudly instead.
+    poll_failure: list = []
+
     def poll_loop():
-        while not stop.is_set():
-            router.poll(0.05)
+        try:
+            while not stop.is_set():
+                router.poll(0.05)
+        except Exception:
+            poll_failure.append(traceback.format_exc())
+            print(f"fatal: router poll thread died\n{poll_failure[0]}",
+                  file=sys.stderr, flush=True)
+            stop.set()
+            threading.Thread(target=http.shutdown, daemon=True).start()
 
     poller = threading.Thread(target=poll_loop, daemon=True,
                               name="router-poll")
@@ -119,7 +134,7 @@ def main():
         http.server_close()
         srv.close()
         print(f"workers exited with {codes}", flush=True)
-    sys.exit(0)
+    sys.exit(1 if poll_failure else 0)
 
 
 if __name__ == "__main__":

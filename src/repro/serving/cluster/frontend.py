@@ -59,6 +59,32 @@ SAMPLING_FIELDS = ("temperature", "top_k", "top_p", "seed",
                    "stop_token_ids", "stop", "logprobs")
 
 
+def _is_num(v) -> bool:
+    return isinstance(v, (int, float)) and not isinstance(v, bool)
+
+
+def _is_int(v) -> bool:
+    return isinstance(v, int) and not isinstance(v, bool)
+
+
+#: per-field (predicate, description) — enforced at the HTTP boundary so
+#: wrong-typed JSON is a 400 here, never a forwarded submit that a
+#: worker has to reject (or, pre-fix, crash on)
+_SAMPLING_CHECKS = {
+    "temperature": (_is_num, "a number"),
+    "top_p": (_is_num, "a number"),
+    "top_k": (_is_int, "an int"),
+    "seed": (lambda v: v is None or _is_int(v), "an int or null"),
+    "logprobs": (lambda v: isinstance(v, bool), "a bool"),
+    "stop_token_ids": (lambda v: isinstance(v, list)
+                       and all(_is_int(t) for t in v), "a list of ints"),
+    "stop": (lambda v: isinstance(v, list)
+             and all(isinstance(s, str) and s for s in v),
+             "a list of non-empty strings (a bare string would match "
+             "per-character)"),
+}
+
+
 class _RequestSink:
     """Bridges router callbacks (router-thread side) to the handler
     thread: every event is one (kind, payload) tuple on a Queue."""
@@ -95,7 +121,10 @@ def _parse_generate_body(body: dict) -> tuple[list[int], int, int, dict,
         raise ValueError("'sampling' must be a JSON object")
     sampling = {k: body[k] for k in SAMPLING_FIELDS if k in body}
     sampling.update({k: nested[k] for k in SAMPLING_FIELDS if k in nested})
-    stops = tuple(sampling.pop("stop", ()) or ())
+    for k, (ok, want) in _SAMPLING_CHECKS.items():
+        if k in sampling and not ok(sampling[k]):
+            raise ValueError(f"{k!r} must be {want} (got {sampling[k]!r})")
+    stops = tuple(sampling.pop("stop", ()))
     stream = bool(body.get("stream", False))
     return prompt, max_new, priority, sampling, stream, stops
 
@@ -183,7 +212,17 @@ class _Handler(BaseHTTPRequestHandler):
                  matcher: StopStringMatcher, stream: bool) -> None:
         """Drain the request's event queue to completion, running the
         detok/stop-string pipeline; emits SSE along the way when
-        ``stream``."""
+        ``stream``.  A client disconnect mid-response (BrokenPipe /
+        ConnectionReset on a write) cancels the request upstream so the
+        engine does not generate the rest as wasted work — the
+        disconnect-cancellation behavior documented on engine.cancel."""
+        try:
+            self._consume_events(rid, sink, matcher, stream)
+        except OSError:
+            self.router.cancel(rid, reason="disconnect")
+
+    def _consume_events(self, rid: int, sink: _RequestSink,
+                        matcher: StopStringMatcher, stream: bool) -> None:
         if stream:
             self._sse_start()
         tokens: list[int] = []
@@ -265,6 +304,15 @@ class ClusterHTTPServer(socketserver.ThreadingMixIn, HTTPServer):
     thread next to the router poll loop."""
 
     daemon_threads = True
+
+    def handle_error(self, request, client_address):
+        # a client that disconnects mid-stream is routine (the handler
+        # already cancelled its rid); only real bugs deserve a traceback
+        import sys
+        exc = sys.exc_info()[1]
+        if isinstance(exc, (BrokenPipeError, ConnectionResetError)):
+            return
+        super().handle_error(request, client_address)
 
     def __init__(self, router: Router, *, host: str = "127.0.0.1",
                  port: int = 0, detokenizer: Optional[Detokenizer] = None):

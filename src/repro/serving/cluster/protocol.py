@@ -35,8 +35,9 @@ a ``replica`` label, concatenated by the frontend's /metrics).
 
 Two transports implement the same ``send``/``poll`` surface:
 ``MessageStream`` wraps a real socket (non-blocking reads via ``select``,
-blocking writes via ``sendall``); ``InProcTransport`` is a deque pair for
-tests that run router and worker in one process with no sockets at all.
+bounded-blocking writes via ``sendall`` under a send timeout);
+``InProcTransport`` is a deque pair for tests that run router and worker
+in one process with no sockets at all.
 """
 from __future__ import annotations
 
@@ -93,20 +94,36 @@ def decode_message(line: bytes) -> dict:
     return msg
 
 
+#: sendall bound.  A healthy peer drains its socket buffer in
+#: milliseconds; a send still blocked after this long means the peer is
+#: wedged (e.g. itself stuck in a blocking write back at us), and the
+#: only safe escalation is ConnectionClosed so the caller marks the
+#: replica dead instead of holding its lock forever.
+SEND_TIMEOUT_S = 30.0
+
+
 class MessageStream:
     """NDJSON messages over a connected socket.
 
-    ``send`` is blocking (sendall — the writer is either the router's
-    lock-held submit path or the worker's pump loop, both of which want
-    backpressure, not buffering).  ``poll`` drains whatever is readable
-    within ``timeout`` seconds and returns complete messages; a partial
-    trailing line stays buffered for the next poll.  EOF raises
-    ``ConnectionClosed`` from the *next* poll after any buffered complete
-    messages have been delivered — no message is lost to a close.
+    ``send`` is bounded-blocking (sendall under ``send_timeout`` — the
+    writer is either the router's lock-held submit path or the worker's
+    pump loop, both of which want backpressure, not buffering; but the
+    router's submit holds the router lock, which the poll thread also
+    needs, so an unbounded sendall against a wedged peer would deadlock
+    the whole cluster).  A timed-out send raises ``ConnectionClosed``:
+    the frame may be half-written, so the connection is unusable and the
+    caller's mark-dead path is the correct escalation.  ``poll`` drains
+    whatever is readable within ``timeout`` seconds and returns complete
+    messages; a partial trailing line stays buffered for the next poll.
+    EOF raises ``ConnectionClosed`` from the *next* poll after any
+    buffered complete messages have been delivered — no message is lost
+    to a close.
     """
 
-    def __init__(self, sock: socket.socket):
+    def __init__(self, sock: socket.socket,
+                 send_timeout: float = SEND_TIMEOUT_S):
         self._sock = sock
+        self._send_timeout = send_timeout
         self._rbuf = b""
         self._eof = False
         self._pending: deque = deque()
@@ -115,8 +132,17 @@ class MessageStream:
         return self._sock.fileno()
 
     def send(self, msg: dict) -> None:
+        data = encode_message(msg)
         try:
-            self._sock.sendall(encode_message(msg))
+            self._sock.settimeout(self._send_timeout)
+            try:
+                self._sock.sendall(data)
+            finally:
+                self._sock.settimeout(None)
+        except socket.timeout:
+            raise ConnectionClosed(
+                f"send timed out after {self._send_timeout:.0f}s "
+                f"(peer wedged, frame possibly half-written)") from None
         except OSError as e:
             raise ConnectionClosed(f"send failed: {e}") from None
 
@@ -208,16 +234,31 @@ def sampling_to_wire(sp) -> dict:
             "stop": list(sp.stop), "logprobs": sp.logprobs}
 
 
+def _wire_seq(d: dict, key: str) -> tuple:
+    """A list-valued wire field as a tuple.  A bare string is rejected
+    rather than iterated: ``"stop": "END"`` would otherwise silently
+    become per-character stops ("E", "N", "D")."""
+    v = d.get(key, ())
+    if isinstance(v, (str, bytes)):
+        raise ValueError(f"{key!r} must be a list, not a bare string "
+                         f"({v!r})")
+    return tuple(v)
+
+
 def sampling_from_wire(d: dict):
     """Inverse of ``sampling_to_wire``.  Imported lazily so this module
     stays importable without pulling serving.sampling's jax import into
-    a process that only routes (the router never calls this)."""
+    a process that only routes (the router never calls this).
+
+    Raises ValueError OR TypeError on wrong-typed fields (float(None),
+    int("x"), ...) — callers that must survive arbitrary wire input
+    (worker submit handling) catch both."""
     from repro.serving.sampling import SamplingParams
     return SamplingParams(
         temperature=float(d.get("temperature", 0.0)),
         top_k=int(d.get("top_k", 0)),
         top_p=float(d.get("top_p", 1.0)),
         seed=None if d.get("seed") is None else int(d["seed"]),
-        stop_token_ids=tuple(d.get("stop_token_ids", ())),
-        stop=tuple(d.get("stop", ())),
+        stop_token_ids=tuple(int(t) for t in _wire_seq(d, "stop_token_ids")),
+        stop=_wire_seq(d, "stop"),
         logprobs=bool(d.get("logprobs", False)))

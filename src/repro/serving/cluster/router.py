@@ -24,8 +24,10 @@ Health: a heartbeat ``ping`` goes to every live replica each
 ``heartbeat_interval``; *any* received message refreshes ``last_seen``
 (token traffic is proof of life — a saturated worker must not need to
 answer pings to stay alive).  ``last_seen`` older than
-``heartbeat_timeout`` — or EOF on the transport — marks the replica
-dead: an absorbing state.  Its in-flight rids fail with
+``heartbeat_timeout`` — or EOF on the transport, or a protocol
+violation (``poll`` contains the ``ProtocolError`` that ``_dispatch``
+raises — a malformed worker message kills that replica, never the poll
+thread) — marks the replica dead: an absorbing state.  Its in-flight rids fail with
 ``ReplicaDeadError`` through their error callbacks, its affinity keys
 drop, and the router keeps serving on the survivors (full zero-loss
 restore stays ROADMAP item 4).
@@ -38,6 +40,11 @@ absorbing; a dead replica is never routed to.
 Threading: the public surface (submit / cancel / poll / stats /
 prometheus_text / drain / broadcast_shutdown) is serialized by one lock,
 so an HTTP handler thread can submit while the router thread polls.
+Sends happen with the lock held, which is safe only because
+``MessageStream.send`` is bounded by its send timeout: a wedged worker
+(blocked writing tokens at us while we block writing submits at it)
+escalates to ConnectionClosed -> ``_mark_dead`` instead of holding the
+lock — and thereby the poll thread — forever.
 Callbacks fire with the lock held — they must be cheap and non-reentrant
 (the HTTP frontend's just enqueue to a per-request Queue).
 
@@ -213,7 +220,14 @@ class Router:
                 if msgs:
                     h.last_seen = max(h.last_seen, self._clock())
                 for m in msgs:
-                    self._dispatch(h, m)
+                    try:
+                        self._dispatch(h, m)
+                    except ProtocolError as e:
+                        # one malformed worker message must never kill
+                        # the (only) poll thread: the offending replica
+                        # dies, survivors keep serving
+                        self._mark_dead(h, str(e))
+                        break
                     handled += 1
             self._heartbeat()
         return handled

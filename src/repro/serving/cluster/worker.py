@@ -131,9 +131,12 @@ class EngineWorker:
                           priority=int(m.get("priority", 0)),
                           sampling=sampling_from_wire(m.get("sampling", {})))
             self.engine.submit(req)
-        except ValueError as e:
+        except (TypeError, ValueError) as e:
             # reject-at-submit surfaces as a typed error upstream; the rid
-            # is finished-with-error, never silently dropped
+            # is finished-with-error, never silently dropped.  TypeError
+            # matters as much as ValueError: wrong-typed wire JSON
+            # ("temperature": null -> float(None)) must reject the one
+            # request, never crash the replica process
             self.transport.send({"type": "error", "rid": rid,
                                  "error": "rejected", "message": str(e)})
 

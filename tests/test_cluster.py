@@ -16,6 +16,7 @@ import signal
 import socket
 import subprocess
 import sys
+import threading
 import time
 import urllib.request
 
@@ -235,6 +236,45 @@ def test_message_stream_eof_after_buffered_messages():
         b.close()
 
 
+def test_message_stream_send_timeout_escalates():
+    """A peer that never drains its socket must not block send forever —
+    the router calls send under its lock, so an unbounded sendall there
+    would wedge the poll thread too.  The timeout escalates to
+    ConnectionClosed (-> mark dead at the call sites)."""
+    a, b = socket.socketpair()
+    try:
+        a.setsockopt(socket.SOL_SOCKET, socket.SO_SNDBUF, 8192)
+        stream = MessageStream(a, send_timeout=0.2)
+        big = {"type": "submit", "rid": 0, "prompt": [7] * 20000}
+        with pytest.raises(ConnectionClosed):
+            for _ in range(64):            # peer never reads: buffers fill
+                stream.send(big)
+    finally:
+        a.close()
+        b.close()
+
+
+def test_sampling_from_wire_rejects_bare_string_seqs():
+    from repro.serving.cluster.protocol import sampling_from_wire
+    # a bare string would silently become per-character entries
+    with pytest.raises(ValueError):
+        sampling_from_wire({"stop": "END"})
+    with pytest.raises(ValueError):
+        sampling_from_wire({"stop_token_ids": "12"})
+    assert sampling_from_wire({"stop": ["END"]}).stop == ("END",)
+
+
+def test_sampling_from_wire_wrong_types_raise_catchable():
+    """Wrong-typed wire JSON raises ValueError or TypeError — both of
+    which the worker's submit handler catches (a null temperature once
+    crashed the replica process)."""
+    from repro.serving.cluster.protocol import sampling_from_wire
+    for bad in ({"temperature": None}, {"top_k": "x"}, {"seed": "s"},
+                {"top_p": [1]}):
+        with pytest.raises((TypeError, ValueError)):
+            sampling_from_wire(bad)
+
+
 def test_inproc_transport_close_semantics():
     a, b = InProcTransport.pair()
     a.send({"type": "ping", "seq": 0})
@@ -432,6 +472,48 @@ def test_router_cancel_forwards_to_owner():
     assert not router.cancel(rid + 999)
 
 
+def test_router_poll_contains_protocol_error_marks_dead():
+    """A malformed worker message must never propagate out of poll()
+    (it would kill the only poll thread while the HTTP server keeps
+    accepting): the offender dies, survivors keep serving."""
+    router, tr, clock = make_router(2)
+    sink = Sink()
+    rid = router.submit([1, 2, 3], 4, **sink.cb())     # -> replica 0
+    assert any(m.get("rid") == rid for m in tr[0].sent)
+    tr[0].reply({"type": "bogus-type"})
+    router.poll(0.0)                                   # must not raise
+    assert router.replica_states()[0]["state"] == "dead"
+    assert isinstance(sink.error, ReplicaDeadError)
+    rid2 = router.submit([4, 5, 6], 4)                 # survivor serves on
+    assert any(m.get("rid") == rid2 for m in tr[1].sent)
+
+
+def test_generate_body_rejects_wrong_typed_sampling():
+    """Type errors become a 400 at the HTTP boundary — the frontend must
+    never forward JSON a worker would choke on."""
+    from repro.serving.cluster.frontend import _parse_generate_body
+    bad = [{"temperature": None}, {"temperature": "hot"}, {"top_k": 1.5},
+           {"top_p": "x"}, {"seed": "s"}, {"logprobs": 1},
+           {"stop_token_ids": "12"}, {"stop_token_ids": [1, "2"]}]
+    for fields in bad:
+        with pytest.raises(ValueError):
+            _parse_generate_body({"prompt": [1, 2], **fields})
+        with pytest.raises(ValueError):                # nested form too
+            _parse_generate_body({"prompt": [1, 2], "sampling": fields})
+
+
+def test_generate_body_rejects_bare_string_stop():
+    """'stop': 'END' must be a 400, not per-character stops 'E','N','D'
+    silently truncating at the first matching letter."""
+    from repro.serving.cluster.frontend import _parse_generate_body
+    for fields in ({"stop": "END"}, {"stop": [""]}, {"stop": [1]},
+                   {"stop": {"s": 1}}):
+        with pytest.raises(ValueError):
+            _parse_generate_body({"prompt": [1, 2], **fields})
+    *_, stops = _parse_generate_body({"prompt": [1, 2], "stop": ["END"]})
+    assert stops == ("END",)
+
+
 def test_generate_body_sampling_nested_or_top_level():
     from repro.serving.cluster.frontend import _parse_generate_body
     # top-level form (what the e2e tests use)
@@ -619,6 +701,70 @@ def test_inproc_cluster_stop_token_and_cancel(tiny_cluster_pieces):
     drive(router, workers, lambda: rid in results)
     assert results[rid]["finish_reason"] == "stop"
     assert 0 < len(results[rid]["token_ids"]) < 32
+
+
+def test_worker_bad_typed_sampling_rejects_not_crash(tiny_cluster_pieces):
+    """Wrong-typed sampling JSON ("temperature": null) reaching a worker
+    must reject the one request with a typed error — pre-fix it raised
+    TypeError out of the pump loop and killed the replica process."""
+    router, workers = make_inproc_cluster(tiny_cluster_pieces, n=1)
+    sink = Sink()
+    router.submit([1, 2, 3], 4, sampling={"temperature": None},
+                  **sink.cb())
+    drive(router, workers, lambda: sink.error is not None)
+    assert isinstance(sink.error, SubmitRejectedError)
+    assert router.replica_states()[0]["state"] == "live"
+    # the worker survived: a well-typed request still completes on it
+    results = {}
+    router.submit([1, 2, 3, 4], 4,
+                  on_finish=lambda m: results.__setitem__(m["rid"], m))
+    drive(router, workers, lambda: results)
+
+
+def test_frontend_disconnect_cancels_request(tiny_cluster_pieces):
+    """A client that drops mid-SSE must cancel its rid upstream — the
+    engine must not generate the remaining tokens as wasted work."""
+    from repro.serving.cluster.frontend import ClusterHTTPServer
+    router, workers = make_inproc_cluster(tiny_cluster_pieces, n=1)
+    http = ClusterHTTPServer(router)
+    stop_pump = threading.Event()
+
+    def pump():
+        while not stop_pump.is_set():
+            for w in workers:
+                w.pump(idle_poll=0.0)
+            router.poll(0.0)
+            time.sleep(0.001)
+
+    threading.Thread(target=pump, daemon=True).start()
+    threading.Thread(target=http.serve_forever, daemon=True).start()
+    try:
+        host, port = http.server_address[:2]
+        body = json.dumps({"prompt": [1, 2, 3, 4], "max_new_tokens": 48,
+                           "stream": True}).encode()
+        conn = socket.create_connection((host, port))
+        conn.sendall(b"POST /v1/generate HTTP/1.1\r\nHost: t\r\n"
+                     b"Content-Type: application/json\r\n"
+                     + f"Content-Length: {len(body)}\r\n\r\n".encode()
+                     + body)
+        buf = b""
+        while b"data: " not in buf:        # first streamed token arrived
+            chunk = conn.recv(4096)
+            assert chunk, "server closed before streaming any token"
+            buf += chunk
+        conn.close()                       # client vanishes mid-stream
+        deadline = time.time() + 60
+        while time.time() < deadline and router.pending_count:
+            time.sleep(0.01)
+        assert router.pending_count == 0, "rid never left the router"
+        assert router.stats["cancelled"] >= 1
+        done = workers[0].engine.completed
+        assert done and done[-1].finish_reason == "disconnect"
+        assert len(done[-1].token_ids) < 48    # generation actually stopped
+    finally:
+        stop_pump.set()
+        http.shutdown()
+        http.server_close()
 
 
 # ---------------------------------------------------------------------------
